@@ -1,0 +1,74 @@
+"""The paper's headline trade-off: per-layer precision vs quality vs energy.
+
+Sweeps uniform and mixed policies on a small LM, reporting next-token CE on
+the integer serving path and the hwmodel energy per token — the software
+equivalent of the paper's MobileNetV2 experiment (§IV).
+
+    PYTHONPATH=src python examples/precision_sweep.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.policy import (LayerPrecision, PrecisionPolicy,
+                               uniform_policy)
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.hwmodel import energy
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve.engine import prepare_params
+from repro.train import optimizer as optim
+from repro.train.step import make_loss_fn, make_train_step
+
+
+def main():
+    cfg = reduced_config("qwen3-8b")
+    model = LM(cfg)
+
+    # Train briefly in 8-bit QAT so quality differences are meaningful.
+    rt_train = Runtime(policy=uniform_policy(8, 8, backend="fake_quant"))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=16))
+    ocfg = optim.OptConfig(lr=1e-2, warmup_steps=5, total_steps=80,
+                           weight_decay=0.0)
+    step = jax.jit(make_train_step(model, rt_train, ocfg))
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": optim.init_state(params, ocfg)}
+    for i in range(60):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        state, m = step(state, b)
+    print(f"trained 60 steps, final ce={float(m['ce']):.3f}")
+
+    held = {k: jnp.asarray(v) for k, v in data.batch(10_000).items()}
+    macs_per_tok = cfg.param_count()  # ~1 MAC per weight per token
+
+    policies = {
+        "w8a8 uniform": uniform_policy(8, 8, backend="decomposed"),
+        "w6a8 uniform": uniform_policy(6, 8, backend="decomposed"),
+        "w4a8 uniform": uniform_policy(4, 8, backend="decomposed"),
+        "w3a8 uniform": uniform_policy(3, 8, backend="decomposed"),
+        "w2a8 uniform": uniform_policy(2, 8, backend="decomposed"),
+        "mixed attn6/mlp4": PrecisionPolicy(rules={
+            "layers.*.attn.*": LayerPrecision(6, 8, backend="decomposed"),
+            "layers.*.mlp.*": LayerPrecision(4, 8, backend="decomposed"),
+        }, default=LayerPrecision(8, 8, backend="decomposed")),
+    }
+    print(f"{'policy':18s} {'CE':>7s} {'pJ/MAC':>8s} {'rel energy':>10s}")
+    e8 = energy.energy_per_mac_j(8, 8) * 1e12
+    for name, pol in policies.items():
+        prepared, _ = prepare_params(state["params"], pol, model)
+        rt = Runtime(policy=pol, mode="serve", moe_dropless=True)
+        loss_fn = make_loss_fn(model, rt)
+        ce = float(loss_fn(prepared, held)[0])
+        bits = pol.lookup("layers.pos0.mlp.up_proj").w_bits
+        if "mixed" in name:
+            pj = 0.45 * energy.energy_per_mac_j(6, 8) * 1e12 \
+                + 0.55 * energy.energy_per_mac_j(4, 8) * 1e12
+        else:
+            pj = energy.energy_per_mac_j(bits, 8) * 1e12
+        print(f"{name:18s} {ce:7.3f} {pj:8.3f} {pj/e8:9.1%}")
+
+
+if __name__ == "__main__":
+    main()

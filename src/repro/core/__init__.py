@@ -1,0 +1,37 @@
+"""Core: the paper's contribution — flexible 2..8-bit precision scaling via
+efficient weight combination (Table-I decomposition, bit-serial MAC, CSA tree,
+PE-array functional model, mixed-precision policy)."""
+from repro.core.decompose import (  # noqa: F401
+    DECOMP_SCHEDULE,
+    SUPPORTED_BITS,
+    decompose_weights,
+    decomposed_matmul,
+    num_planes,
+    plane_shifts,
+    recompose_weights,
+    weight_range,
+)
+from repro.core.quant import (  # noqa: F401
+    QuantConfig,
+    compute_scale,
+    dequantize,
+    fake_quant,
+    int_matmul_dequant,
+    quantize,
+)
+from repro.core.bitserial import activation_bitplanes, bitserial_mac  # noqa: F401
+from repro.core.adder_tree import csa_tree_sum, msb_path_activity  # noqa: F401
+from repro.core.pe_array import (  # noqa: F401
+    PEArrayConfig,
+    PEArrayStats,
+    array_utilization,
+    pe_array_matmul,
+    peak_tops,
+)
+from repro.core.policy import (  # noqa: F401
+    BACKENDS,
+    LayerPrecision,
+    PrecisionPolicy,
+    allocate_bits_by_sensitivity,
+    uniform_policy,
+)

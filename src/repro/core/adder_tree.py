@@ -1,0 +1,53 @@
+"""Split-path CSA adder tree — functional model (paper §III-C, Fig. 6).
+
+The column adder tree must sum 64 3-bit signed products.  A carry-save tree
+cannot sign-extend mid-reduction the way a binary adder tree (BAT) can, so the
+paper splits the sum into two independent paths:
+
+  * MSB path: the top bit of each 3-bit signed product has weight -2^2 = -4.
+    The tree simply counts the set MSBs (a popcount), and the count is negated
+    ("the result should be inverse") before the merge.
+  * Low path: the bottom 2 bits are unsigned in [0,3]; an unsigned CSA tree
+    sums them.  The lowest 2 result bits pass straight through; the upper bits
+    merge with the MSB-path result.
+
+When a column holds unsigned weights every MSB input is 0, the MSB path is
+quiet, and no invalid carries toggle — that is the power win of Table II.
+
+This module is the *functional contract* (bit-exact); gate/energy costs live
+in ``repro.hwmodel``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def split_products(products):
+    """Split 3-bit signed products (in [-4, 3]) into (msb_bits, low2)."""
+    p = jnp.asarray(products).astype(jnp.int32)
+    u = p & 0b111                       # 3-bit two's-complement pattern
+    msb = (u >> 2) & 1                  # weight -4
+    low2 = u & 0b11                     # unsigned [0, 3]
+    return msb, low2
+
+
+def csa_tree_sum(products, axis: int = -1):
+    """Sum 3-bit signed products via the split MSB / low-2-bit paths.
+
+    Bit-exact with ``jnp.sum(products, axis)`` for inputs in [-4, 3].
+    """
+    msb, low2 = split_products(products)
+    msb_count = jnp.sum(msb, axis=axis)        # popcount of sign bits
+    low_sum = jnp.sum(low2, axis=axis)         # unsigned CSA path
+    # Merge: low 2 bits of low_sum pass through; upper bits add to the
+    # (negated) MSB count.  Algebraically: low_sum - 4*msb_count.
+    low_pass = low_sum & 0b11
+    high = (low_sum >> 2) - msb_count          # "inverse" of the popcount
+    return (high << 2) + low_pass
+
+
+def msb_path_activity(products, axis: int = -1):
+    """Fraction of nonzero MSB-path inputs — drives the unsigned-power saving
+    in the hwmodel (all-zero for unsigned columns)."""
+    msb, _ = split_products(products)
+    return jnp.mean(msb.astype(jnp.float32), axis=axis)

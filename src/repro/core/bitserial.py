@@ -1,0 +1,72 @@
+"""Bit-serial MAC semantics — a literal, bit-exact model of paper Eq. (1).
+
+    MAC = sum_c ( sum_t sum_r  A^r[t] * W_dcp^r[c] * (-1)^{SF} * 2^t ) * 2^{2c}
+
+Activations stream LSB-first, one bit per cycle `t`; `SF` marks the sign-bit
+cycle of a signed activation (two's complement: the MSB has weight -2^{N-1},
+realized in hardware by inverting the adder-tree output and adding one).
+Decomposed weight planes `c` are combined spatially with shifts 2^{2c}
+(the 4-column group's shift-add in Fig. 5).
+
+These functions are the semantic ground truth for everything above them:
+the PE-array simulator, the pure-jnp kernel oracle, and the Pallas kernel
+are all property-tested against plain integer matmul through this module.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import decompose
+
+
+def activation_bitplanes(a_int, a_bits: int, *, signed: bool = True):
+    """Split integer activations into LSB-first bit-planes.
+
+    Returns (bits, weights): ``bits`` is uint8 {0,1} of shape (N, *a.shape);
+    ``weights`` is an int32 vector of per-plane arithmetic weights, where the
+    sign-bit plane of a signed activation carries -2^{N-1} (Eq. (1)'s
+    (-1)^{SF} factor folded in).
+    """
+    u = jnp.asarray(a_int).astype(jnp.int32) & ((1 << a_bits) - 1)
+    bits = jnp.stack([(u >> t) & 1 for t in range(a_bits)]).astype(jnp.int8)
+    weights = []
+    for t in range(a_bits):
+        w = 1 << t
+        if signed and t == a_bits - 1:
+            w = -w  # SF cycle: adder-tree output is negated before accumulation
+        weights.append(w)
+    return bits, jnp.asarray(weights, jnp.int32)
+
+
+def bitserial_mac(a_int, w_int, a_bits: int, w_bits: int, *,
+                  a_signed: bool = True, w_signed: bool = True):
+    """Eq. (1) evaluated literally: bit-serial over t, plane-spatial over c.
+
+    a_int: [..., R] integer activations (R = rows reduced over).
+    w_int: [R, C] integer weights.
+    Returns int32 [..., C], exactly equal to ``a_int @ w_int``.
+    """
+    planes = decompose.decompose_weights(w_int, w_bits, signed=w_signed)
+    shifts = decompose.plane_shifts(w_bits, w_signed)
+    bits, bit_weights = activation_bitplanes(a_int, a_bits, signed=a_signed)
+
+    acc = jnp.zeros(a_int.shape[:-1] + (w_int.shape[-1],), jnp.int32)
+    for c, s in enumerate(shifts):           # spatial: one column per plane
+        w_plane = planes[c].astype(jnp.int32)
+        col_acc = jnp.zeros_like(acc)
+        for t in range(a_bits):              # temporal: one activation bit per cycle
+            # Per-cycle column adder tree: sum over rows of (1-bit A) * W_dcp.
+            tree = jnp.matmul(bits[t].astype(jnp.int32), w_plane)
+            col_acc = col_acc + tree * bit_weights[t]
+        acc = acc + (col_acc << s)           # group shift-add combine (Fig. 5)
+    return acc
+
+
+def cycles_per_mac(a_bits: int) -> int:
+    """Bit-serial cycle count per MAC tile pass (one bit of A per clk cycle)."""
+    return a_bits
+
+
+def shift_add_clock_divider(a_bits: int) -> int:
+    """clk_SA = clk / a_bits (paper §III-B lower-frequency shift-add domain)."""
+    return a_bits

@@ -1,0 +1,153 @@
+"""Table-I weight decomposition — the paper's efficient weight-combination scheme.
+
+An M-bit weight (M in 2..8) is decomposed into a fixed MSB->LSB schedule of
+2-bit and 3-bit chunks (paper Table I):
+
+    M : 8        7      6      5    4    3  2
+      : 2-2-2-2  3-2-2  2-2-2  3-2  2-2  3  2
+
+Only the MSB chunk can be 3 bits wide, and only the MSB chunk carries the sign
+(2-bit mode: sign extension via the shared column signal S; 3-bit mode: top
+three bits including the original sign bit loaded verbatim).  All non-MSB
+chunks are unsigned 2-bit values.  Consequently every plane `c` sits at shift
+`2*c` bits (paper Eq. (1) term 2^{2c}; Table I shifter config {2,2,4}).
+
+Planes are returned LSB-first: ``planes[c]`` has arithmetic weight ``4**c``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# MSB -> LSB chunk widths, straight from paper Table I.
+DECOMP_SCHEDULE: dict[int, tuple[int, ...]] = {
+    2: (2,),
+    3: (3,),
+    4: (2, 2),
+    5: (3, 2),
+    6: (2, 2, 2),
+    7: (3, 2, 2),
+    8: (2, 2, 2, 2),
+}
+
+SUPPORTED_BITS = tuple(sorted(DECOMP_SCHEDULE))
+
+
+def schedule(w_bits: int, signed: bool = True) -> tuple[int, ...]:
+    """Effective MSB->LSB chunk schedule.
+
+    UNSIGNED weights always use 2-bit mode (paper Fig. 6: an unsigned column
+    feeds all-zero MSBs into the adder tree, i.e. chunks are unsigned 2-bit
+    values in [0,3]); an odd unsigned width therefore promotes to the next
+    even schedule (3 -> 2-2, 5 -> 2-2-2, 7 -> 2-2-2-2) so no chunk ever
+    exceeds the 3-bit-signed product range of the datapath."""
+    if not signed and w_bits % 2 == 1:
+        return DECOMP_SCHEDULE[w_bits + 1]
+    return DECOMP_SCHEDULE[w_bits]
+
+
+def num_planes(w_bits: int, signed: bool = True) -> int:
+    """Number of decomposed planes (physical columns per logical weight)."""
+    return len(schedule(w_bits, signed))
+
+
+def plane_shifts(w_bits: int, signed: bool = True) -> tuple[int, ...]:
+    """Arithmetic left-shift of each plane, LSB-first.  Always (0, 2, 4, 6)[:P]."""
+    return tuple(2 * c for c in range(num_planes(w_bits, signed)))
+
+
+def plane_widths_lsb_first(w_bits: int, signed: bool = True) -> tuple[int, ...]:
+    return tuple(reversed(schedule(w_bits, signed)))
+
+
+def msb_plane_width(w_bits: int, signed: bool = True) -> int:
+    """Width of the sign-carrying MSB chunk (2 -> '2-bit mode', 3 -> '3-bit mode')."""
+    return schedule(w_bits, signed)[0]
+
+
+def weight_range(w_bits: int, signed: bool) -> tuple[int, int]:
+    """Representable integer range for an M-bit (un)signed weight."""
+    if signed:
+        return -(1 << (w_bits - 1)), (1 << (w_bits - 1)) - 1
+    return 0, (1 << w_bits) - 1
+
+
+def plane_value_range(w_bits: int, plane: int, signed: bool) -> tuple[int, int]:
+    """Value range of decomposed plane `plane` (LSB-first index)."""
+    widths = plane_widths_lsb_first(w_bits, signed)
+    w = widths[plane]
+    is_msb = plane == len(widths) - 1
+    if is_msb and signed:
+        return -(1 << (w - 1)), (1 << (w - 1)) - 1
+    return 0, (1 << w) - 1
+
+
+def decompose_weights(w, w_bits: int, *, signed: bool = True):
+    """Decompose integer weights into Table-I planes.
+
+    Args:
+      w: integer array, values within ``weight_range(w_bits, signed)``.
+      w_bits: weight precision, 2..8.
+      signed: the paper's column signal S (True = signed weights).
+
+    Returns:
+      int8 array of shape ``(P, *w.shape)`` with planes LSB-first; plane ``c``
+      has arithmetic weight ``4**c``.  The MSB plane is signed iff ``signed``;
+      all other planes are unsigned 2-bit values in [0, 3].
+    """
+    if w_bits not in DECOMP_SCHEDULE:
+        raise ValueError(f"w_bits must be in {SUPPORTED_BITS}, got {w_bits}")
+    widths = plane_widths_lsb_first(w_bits, signed)
+    # Two's-complement bit pattern of the weight, as an unsigned field.
+    u = jnp.asarray(w).astype(jnp.int32) & ((1 << w_bits) - 1)
+    planes = []
+    shift = 0
+    for i, width in enumerate(widths):
+        chunk = (u >> shift) & ((1 << width) - 1)
+        is_msb = i == len(widths) - 1
+        if is_msb and signed:
+            # Reinterpret the MSB chunk as a `width`-bit signed value.
+            chunk = jnp.where(chunk >= (1 << (width - 1)), chunk - (1 << width), chunk)
+        planes.append(chunk)
+        shift += width
+    return jnp.stack(planes).astype(jnp.int8)
+
+
+def recompose_weights(planes, w_bits: int, *, signed: bool = True):
+    """Exact inverse of :func:`decompose_weights` (int32 output)."""
+    shifts = plane_shifts(w_bits, signed)
+    if planes.shape[0] != len(shifts):
+        raise ValueError(
+            f"plane count {planes.shape[0]} != schedule {len(shifts)} for {w_bits}-bit"
+        )
+    acc = jnp.zeros(planes.shape[1:], jnp.int32)
+    for c, s in enumerate(shifts):
+        acc = acc + (planes[c].astype(jnp.int32) << s)
+    return acc
+
+
+def planes_count(w_planes) -> int:
+    return w_planes.shape[0]
+
+
+def decomposed_matmul(x_int, w_planes, w_bits: int):
+    """``x_int @ recompose(w_planes)`` computed the paper's way: one integer
+    matmul per plane, partial sums combined with shifts (the TPU analogue of
+    the 4-column group's shift-add combine).
+
+    Args:
+      x_int: int array [..., K] (quantized activations, any int bitwidth <= 8).
+      w_planes: int8 [P, K, N] decomposed weight planes (LSB-first).
+      w_bits: weight precision (determines the shift schedule).
+
+    Returns:
+      int32 [..., N] exact MAC result.
+    """
+    # Shift schedule is always 2c per plane, independent of the schedule
+    # variant (only the MSB chunk may be 3 wide), so derive from plane count.
+    shifts = tuple(2 * c for c in range(planes_count(w_planes)))
+    x32 = x_int.astype(jnp.int32)
+    acc = None
+    for c, s in enumerate(shifts):
+        part = jnp.matmul(x32, w_planes[c].astype(jnp.int32)) << s
+        acc = part if acc is None else acc + part
+    return acc

@@ -1,0 +1,120 @@
+"""Per-layer mixed-precision policy — the configuration surface of the paper.
+
+The accelerator's value proposition is *fully mixed-precision* inference:
+every layer may run at any (w_bits, a_bits) in 2..8.  This module holds the
+policy objects the model layers consult, plus a sensitivity-based allocator
+(HAWQ-style gradient-squared proxy) that picks per-layer bitwidths under an
+average-bit budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Dict, Optional
+
+# Matmul execution backends, lowest to highest fidelity to the accelerator:
+#   dense       - bf16 matmul, no quantization (fp baseline)
+#   fake_quant  - QAT: quantize-dequantize with STE, dense matmul (training)
+#   decomposed  - integer plane-decomposed matmul, pure-JAX HLO (serving/dry-run)
+#   pallas      - the Pallas TPU kernel (serving hot path; interpret on CPU)
+BACKENDS = ("dense", "fake_quant", "decomposed", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPrecision:
+    w_bits: int = 8
+    a_bits: int = 8
+    w_signed: bool = True
+    a_signed: bool = True
+    backend: str = "fake_quant"
+
+    def __post_init__(self):
+        if not (2 <= self.w_bits <= 8 and 2 <= self.a_bits <= 8):
+            raise ValueError(f"bits out of 2..8: w={self.w_bits} a={self.a_bits}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+
+    def with_backend(self, backend: str) -> "LayerPrecision":
+        return dataclasses.replace(self, backend=backend)
+
+
+DEFAULT_PRECISION = LayerPrecision()
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """Maps layer names (glob patterns) to LayerPrecision.
+
+    First matching rule wins; ``default`` applies otherwise.  Layer names are
+    hierarchical, e.g. ``layers.3.attn.q_proj`` or ``layers.*.mlp.up_proj``.
+    """
+
+    rules: Dict[str, LayerPrecision] = dataclasses.field(default_factory=dict)
+    default: LayerPrecision = DEFAULT_PRECISION
+
+    def lookup(self, name: str) -> LayerPrecision:
+        for pattern, prec in self.rules.items():
+            if fnmatch.fnmatch(name, pattern):
+                return prec
+        return self.default
+
+    def with_backend(self, backend: str) -> "PrecisionPolicy":
+        return PrecisionPolicy(
+            rules={k: v.with_backend(backend) for k, v in self.rules.items()},
+            default=self.default.with_backend(backend),
+        )
+
+    def average_bits(self, layer_names, param_counts=None) -> float:
+        names = list(layer_names)
+        counts = param_counts or [1] * len(names)
+        tot = sum(counts)
+        return sum(self.lookup(n).w_bits * c for n, c in zip(names, counts)) / tot
+
+
+def uniform_policy(w_bits: int, a_bits: int, backend: str = "fake_quant",
+                   a_signed: bool = True) -> PrecisionPolicy:
+    return PrecisionPolicy(default=LayerPrecision(
+        w_bits=w_bits, a_bits=a_bits, backend=backend, a_signed=a_signed))
+
+
+def allocate_bits_by_sensitivity(sensitivities: Dict[str, float],
+                                 param_counts: Dict[str, int],
+                                 avg_bits: float,
+                                 choices=(2, 3, 4, 5, 6, 7, 8),
+                                 a_bits: int = 8,
+                                 backend: str = "fake_quant") -> PrecisionPolicy:
+    """Greedy sensitivity-based bit allocation (HAWQ-flavoured).
+
+    Start everything at min(choices); repeatedly grant one step of extra
+    precision to the layer with the highest marginal sensitivity-per-parameter
+    until the parameter-weighted average bitwidth budget is exhausted.
+    """
+    names = sorted(sensitivities)
+    lo, hi = min(choices), max(choices)
+    bits = {n: lo for n in names}
+    total_params = sum(param_counts[n] for n in names)
+    budget = avg_bits * total_params
+
+    def used():
+        return sum(bits[n] * param_counts[n] for n in names)
+
+    # Marginal value of +1 bit ~ sensitivity * 2^{-bits} (quantization error
+    # of a symmetric quantizer halves per extra bit).
+    import heapq
+    heap = [(-sensitivities[n] * 2.0 ** (-bits[n]), n) for n in names]
+    heapq.heapify(heap)
+    while heap:
+        neg_gain, n = heapq.heappop(heap)
+        if bits[n] >= hi:
+            continue
+        step = next(c for c in choices if c > bits[n]) - bits[n]
+        if used() + step * param_counts[n] > budget:
+            continue
+        bits[n] += step
+        heapq.heappush(heap, (-sensitivities[n] * 2.0 ** (-bits[n]), n))
+
+    rules = {n: LayerPrecision(w_bits=bits[n], a_bits=a_bits, backend=backend)
+             for n in names}
+    return PrecisionPolicy(rules=rules,
+                           default=LayerPrecision(a_bits=a_bits, backend=backend))

@@ -1,0 +1,158 @@
+"""Parameter/batch/cache sharding rules for the production mesh.
+
+2D weight sharding (FSDP over "data" x TP over "model"), EP for expert
+weights when the expert count divides the model axis, replication for
+vectors.  Rules match on parameter path suffixes produced by
+``jax.tree_util.keystr`` (e.g. ``['periods']['pos0']['attn']['q_proj']['w']``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+
+# (suffix substring, logical spec for the trailing dims).  First match wins.
+# Stacked leading period dims are padded with None automatically.
+_RULES: tuple[tuple[str, tuple], ...] = (
+    # MoE expert banks [E, d, f] / [E, f, d]: EP on E (checked divisible),
+    # FSDP on the middle dim.
+    ("['moe']['gate_proj']['w']", ("expert", "fsdp", None)),
+    ("['moe']['up_proj']['w']", ("expert", "fsdp", None)),
+    ("['moe']['down_proj']['w']", ("expert", "fsdp", None)),
+    ("['moe']['router']['w']", (None, None)),
+    # Attention / MLP projections [in, out].
+    ("['q_proj']['w']", ("fsdp", "model")),
+    ("['k_proj']['w']", ("fsdp", "model")),
+    ("['v_proj']['w']", ("fsdp", "model")),
+    ("['o_proj']['w']", ("model", "fsdp")),
+    ("['gate_proj']['w']", ("fsdp", "model")),
+    ("['up_proj']['w']", ("fsdp", "model")),
+    ("['down_proj']['w']", ("model", "fsdp")),
+    # SSM projections.
+    ("['in_proj']['w']", ("fsdp", "model")),
+    ("['out_proj']['w']", ("model", "fsdp")),
+    # Embedding / head.
+    ("['embed']['emb']", ("model", "fsdp")),
+    ("['lm_head']['w']", ("fsdp", "model")),
+)
+
+_MOE_TP_FALLBACK = {
+    "['moe']['gate_proj']['w']": (None, "fsdp", "model"),
+    "['moe']['up_proj']['w']": (None, "fsdp", "model"),
+    "['moe']['down_proj']['w']": (None, "model", "fsdp"),
+}
+
+
+def param_spec(mesh: Mesh, path: str, leaf) -> P:
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    is_planes = path.endswith(".planes")   # QuantizedWeight planes [..,P,K,N]
+    for suffix, logical in _RULES:
+        if suffix in path:
+            # EP fallback: experts must divide the model axis.
+            if suffix in _MOE_TP_FALLBACK:
+                e = leaf.shape[-4] if is_planes else leaf.shape[-3]
+                model_size = mesh.shape.get("model", 1)
+                if e % model_size != 0:
+                    logical = _MOE_TP_FALLBACK[suffix]
+            if is_planes and len(logical) == 3:
+                # Keep E on the expert dim; plane dim P replicated.
+                logical = (logical[0], None) + tuple(logical[1:])
+            lead = ndim - len(logical)
+            axes = (None,) * lead + tuple(
+                shlib.resolve_axis(mesh, a) for a in logical)
+            # Drop annotations that do not divide.
+            axes = tuple(
+                a if a is not None and leaf.shape[i] % _axis_size(mesh, a) == 0
+                else None
+                for i, a in enumerate(axes))
+            return P(*axes)
+    return P()  # vectors / norms / biases: replicated
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def tree_shardings(mesh: Mesh, tree: Any):
+    """NamedSharding pytree for params / optimizer state / caches."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        out.append(NamedSharding(mesh, param_spec(mesh, path, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_spec(mesh: Mesh, shape) -> P:
+    """Batch sharded over (pod, data) when divisible; else replicated
+    (e.g. long-context global_batch=1)."""
+    ndim = len(shape)
+    batch_axes = shlib.resolve_axis(mesh, "batch")
+    if batch_axes is None or shape[0] % _axis_size(mesh, batch_axes) != 0:
+        return P(*([None] * ndim))
+    return P(batch_axes, *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch: Any):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(mesh, np.shape(x))), batch)
+
+
+def cache_spec(mesh: Mesh, path: str, leaf) -> P:
+    """KV/SSM caches: batch axis sharded (dim 1 after the stacked period
+    dim 0); KV / SSM heads sharded over model when divisible; long-context
+    KV falls back to sequence sharding (SP) when the batch does not divide."""
+    ndim = leaf.ndim
+    if ndim < 4:
+        return P()
+    batch_axes = shlib.resolve_axis(mesh, "batch")
+    model = shlib.resolve_axis(mesh, "model")
+    axes = [None] * ndim
+    if batch_axes is not None and leaf.shape[1] % _axis_size(mesh, batch_axes) == 0:
+        axes[1] = batch_axes
+
+    def try_axis(dim, ax):
+        if ax is not None and leaf.shape[dim] % _axis_size(mesh, ax) == 0:
+            axes[dim] = ax
+
+    leafname = path.rsplit(".", 1)[-1] if "." in path else path
+    if leafname in ("k", "v"):
+        # [periods, B, S, KVH, Dh]: TP over KV heads when they divide the
+        # model axis, else over head_dim (both are update-index-free dims, so
+        # decode's dynamic_update_slice stays local); SP over S if batch
+        # could not shard (long-context, batch=1).
+        try_axis(3, model)
+        if axes[3] is None:
+            try_axis(4, model)
+        if axes[1] is None:
+            try_axis(2, shlib.resolve_axis(mesh, "seq"))
+    elif leafname in ("k_scale", "v_scale"):
+        # [periods, B, S, KVH, 1]: follow the KV head sharding.
+        try_axis(3, model)
+        if axes[1] is None:
+            try_axis(2, shlib.resolve_axis(mesh, "seq"))
+    elif leafname == "state":
+        try_axis(2, model)        # [periods, B, H, N, P]: TP over SSM heads
+    elif leafname == "conv":
+        try_axis(3, model)        # [periods, B, W, C]: TP over channels
+    return P(*axes)
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        out.append(NamedSharding(mesh, cache_spec(mesh, path, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)

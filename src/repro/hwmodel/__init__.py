@@ -1,0 +1,4 @@
+"""Analytic hardware model of the paper's accelerator (28 nm, 64x64 array):
+structural adder-tree costs (Table II), PE/accelerator energy (Table III,
+Fig 8), area/power breakdown (Fig 7), MobileNetV2 workload (§IV)."""
+from repro.hwmodel import adder_tree_cost, breakdown, energy, mobilenet  # noqa: F401

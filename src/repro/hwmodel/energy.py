@@ -1,0 +1,137 @@
+"""PE-array / accelerator energy model — reproduces §IV (Table III, Fig 8).
+
+Throughput is *derived* from the architecture (``core.pe_array.peak_tops``:
+plane count, column grouping, bit-serial cycles).  Power is a 4-coefficient
+linear model over structural features (accumulator width, multi-plane
+combine activity, shift-add clock ratio) solved exactly against the paper's
+four measured PE-array efficiency points @0.72 V / 500 MHz:
+
+    8/8: 14   4/4: 52.1   3/3: 139.8   2/2: 205.8   TOPS/W
+
+A striking structural fact falls out: the implied array power is ~9.1-9.9 mW
+across ALL precision modes — the efficiency scaling is almost purely the
+ops/cycle scaling of the weight-combination scheme, which is the paper's
+central claim.
+
+Accelerator-level numbers apply one overhead factor (buffers + control):
+the paper's own three points give 14/4.69 = 52.1/17.45 = 205.8/68.94 = 2.985
+(constant across precisions — a strong internal-consistency validation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import pe_array
+
+CAL_VOLTAGE = 0.72
+CAL_FREQ_MHZ = 500.0
+CAL_TOGGLE = 0.5              # 50 % weight sparsity in §IV
+PEAK_VOLTAGE = 1.05
+PEAK_FREQ_MHZ = 1000.0
+
+PAPER_PE_EFF = {(8, 8): 14.0, (4, 4): 52.1, (3, 3): 139.8, (2, 2): 205.8}
+PAPER_ACCEL_EFF = {(8, 8): 4.69, (4, 4): 17.45, (2, 2): 68.94}
+PAPER_PEAK_TOPS = 4.09
+ACCEL_OVERHEAD = 2.985        # buffers/NoC/control power factor (see above)
+STATIC_FRACTION = 0.12        # leakage share at the calibration point
+
+_CFG = pe_array.PEArrayConfig(clk_mhz=CAL_FREQ_MHZ)
+
+
+def tops(w_bits: int, a_bits: int, *, freq_mhz: float = CAL_FREQ_MHZ) -> float:
+    cfg = dataclasses.replace(_CFG, clk_mhz=freq_mhz)
+    return pe_array.peak_tops(cfg, w_bits, a_bits)
+
+
+def _features(w_bits: int, a_bits: int) -> np.ndarray:
+    from repro.core import decompose
+    acc_width = (w_bits + a_bits + 6) / 16.0       # +log2(64 rows)
+    multi_plane = 1.0 if decompose.num_planes(w_bits) > 1 else 0.0
+    return np.array([1.0, acc_width, multi_plane, 1.0 / a_bits])
+
+
+def _solve_power_coeffs() -> np.ndarray:
+    pts = sorted(PAPER_PE_EFF)
+    feats = np.stack([_features(w, a) for w, a in pts])
+    targets = np.array([tops(w, a) / PAPER_PE_EFF[(w, a)] for w, a in pts])
+    return np.linalg.solve(feats, targets)
+
+
+_COEFFS = _solve_power_coeffs()
+
+
+def pe_power_w(w_bits: int, a_bits: int, *, toggle: float = CAL_TOGGLE,
+               voltage: float = CAL_VOLTAGE,
+               freq_mhz: float = CAL_FREQ_MHZ) -> float:
+    """Array power in watts; V^2*f dynamic scaling + toggle-rate scaling."""
+    p_cal = float(_features(w_bits, a_bits) @ _COEFFS)
+    p_static = STATIC_FRACTION * p_cal
+    p_dyn = (p_cal - p_static) * (toggle / CAL_TOGGLE)
+    vf = (voltage / CAL_VOLTAGE) ** 2 * (freq_mhz / CAL_FREQ_MHZ)
+    return p_dyn * vf + p_static * (voltage / CAL_VOLTAGE)
+
+
+def pe_efficiency(w_bits: int, a_bits: int, *, toggle: float = CAL_TOGGLE,
+                  voltage: float = CAL_VOLTAGE,
+                  freq_mhz: float = CAL_FREQ_MHZ) -> float:
+    """TOPS/W of the PE array."""
+    return tops(w_bits, a_bits, freq_mhz=freq_mhz) / pe_power_w(
+        w_bits, a_bits, toggle=toggle, voltage=voltage, freq_mhz=freq_mhz)
+
+
+def accelerator_efficiency(w_bits: int, a_bits: int, **kw) -> float:
+    return pe_efficiency(w_bits, a_bits, **kw) / ACCEL_OVERHEAD
+
+
+def peak_throughput_tops() -> float:
+    """Peak accelerator throughput: 2/2-bit @ 1 GHz (paper: 4.09)."""
+    return tops(2, 2, freq_mhz=PEAK_FREQ_MHZ)
+
+
+def energy_per_mac_j(w_bits: int, a_bits: int, *, accelerator: bool = True,
+                     **kw) -> float:
+    eff = accelerator_efficiency(w_bits, a_bits, **kw) if accelerator \
+        else pe_efficiency(w_bits, a_bits, **kw)
+    return 2.0 / (eff * 1e12)          # 2 ops per MAC
+
+
+def fig8_curve(w_bits: int, a_bits: int, toggles=(0.1, 0.2, 0.3, 0.4, 0.5,
+                                                  0.6, 0.7, 0.8, 0.9)):
+    """Energy efficiency vs input toggle rate (Fig 8 family of curves)."""
+    return {t: pe_efficiency(w_bits, a_bits, toggle=t) for t in toggles}
+
+
+def table3_ours() -> Dict[str, object]:
+    return {
+        "tech_nm": 28,
+        "area_mm2": 0.75,
+        "freq_mhz": PEAK_FREQ_MHZ,
+        "peak_tops": peak_throughput_tops(),
+        "eff_8bit": accelerator_efficiency(8, 8),
+        "eff_4bit": accelerator_efficiency(4, 4),
+        "eff_2bit": accelerator_efficiency(2, 2),
+    }
+
+
+# Published comparison rows (Table III), scaled-to-28nm values as printed.
+TABLE3_OTHERS = {
+    "TVLSI22_bitparallel": {"peak_tops": 4.12, "eff_8bit": 3.62,
+                            "eff_4bit": 12.13, "eff_2bit": 22.89},
+    "UNPU_JSSC18": {"peak_tops": 7.372, "eff_16bit": 7.15, "eff_4bit": 26.93},
+    "BitSystolic_TCASI20": {"peak_tops": 0.403, "eff_8bit": 3.95,
+                            "eff_4bit": 15.79, "eff_2bit": 61.98},
+}
+
+
+def improvement_vs_bitsystolic() -> Dict[str, float]:
+    """Paper claims +18.7 % / +10.5 % / +11.2 % at 8/4/2-bit."""
+    ours = table3_ours()
+    bs = TABLE3_OTHERS["BitSystolic_TCASI20"]
+    return {
+        "8bit": ours["eff_8bit"] / bs["eff_8bit"] - 1.0,
+        "4bit": ours["eff_4bit"] / bs["eff_4bit"] - 1.0,
+        "2bit": ours["eff_2bit"] / bs["eff_2bit"] - 1.0,
+    }

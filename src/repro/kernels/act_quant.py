@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused per-row activation quantization.
+
+The accelerator receives activations already quantized (serial bit feed);
+on TPU the quantize step is a VPU pass we fuse into one kernel so the f32
+activation tensor is read from HBM exactly once, emitting int8 + per-row
+scale.  Rows are the flattened (batch x seq) axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, qmin, qmax):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    q_ref[...] = q.astype(q_ref.dtype)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "signed", "bm", "interpret"))
+def act_quant(x, *, bits: int = 8, signed: bool = True, bm: int = 128,
+              interpret: bool = False):
+    """Per-row symmetric quantization. x: f32 [M, K] -> (int8 [M, K], f32 [M, 1]).
+
+    M must tile by bm (ops.py pads); K is kept whole in VMEM (row reduction)."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    qmin = -(1 << (bits - 1)) if signed else 0
+    qdtype = jnp.int8 if signed else jnp.uint8
+
+    return pl.pallas_call(
+        functools.partial(_kernel, qmin=qmin, qmax=qmax),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), qdtype),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,128 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs       / (chips * peak_FLOP/s)
+    memory     = HLO_bytes       / (chips * HBM_bw)
+    collective = collective_bytes/ (chips * link_bw)
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16 per
+chip (394 TOPS int8 for the decomposed integer path), 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste), the
+dominant term, and a one-line lever per cell.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+PEAK_OPS_INT8 = 394e12          # decomposed integer path
+HBM_BW = 819e9                  # bytes/s per chip
+LINK_BW = 50e9                  # bytes/s per ICI link
+
+
+def roofline_terms(cell: Dict[str, Any], *, int8_peak: bool = False
+                   ) -> Optional[Dict[str, Any]]:
+    if cell.get("skipped"):
+        return None
+    chips = cell["n_devices"]
+    flops = float(cell.get("flops") or 0.0)
+    byts = float(cell.get("bytes_accessed") or 0.0)
+    coll = float(cell["collectives"]["total_bytes"])
+    peak = PEAK_OPS_INT8 if int8_peak else PEAK_FLOPS_BF16
+    # HLO flops/bytes from cost_analysis are PER-PARTITION after SPMD (the
+    # module is the per-device program): divide by per-chip rates only.
+    t_compute = flops / peak
+    t_memory = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    # TPU-adjusted collective term: f32 collectives exist only because
+    # XLA:CPU promotes bf16 dot operands; native-bf16 TPU moves half.
+    f32_coll = float(cell["collectives"].get("f32_bytes", 0.0))
+    t_coll_tpu = (coll - 0.5 * f32_coll) / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = float(cell.get("model_flops") or 0.0)
+    hlo_total = flops * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    bound_time = max(terms.values())
+    # Roofline fraction: useful model FLOPs per chip-second at peak vs the
+    # bound term (1.0 = the dominant resource is fully spent on model math).
+    frac = (model_flops / chips / peak) / bound_time if bound_time else 0.0
+    return {
+        **terms,
+        "collective_tpu_adj_s": t_coll_tpu,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "step_time_bound_s": bound_time,
+    }
+
+
+LEVERS = {
+    "compute": "cut redundant HLO FLOPs (remat policy, fewer quant passes, "
+               "bf16 cast before matmul)",
+    "memory": "cut bytes: pack weight planes (w_bits/8 B/weight), quantize "
+              "KV cache, fuse quant into matmul epilogue",
+    "collective": "reshard to remove all-gathers (2D->1D for small dims), "
+                  "overlap via latency-hiding scheduler, compress grads",
+}
+
+
+def load_cells(result_dir: str) -> List[Dict[str, Any]]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def format_table(cells: List[Dict[str, Any]], *, int8_peak_backends=("decomposed", "pallas")) -> str:
+    rows = []
+    header = ("| arch | shape | mesh | backend | compute s | memory s | "
+              "collective s | dominant | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for c in cells:
+        if c.get("skipped"):
+            rows.append(f"| {c['arch']} | {c['shape']} | {c.get('mesh','-')} | - "
+                        f"| - | - | - | SKIP | - | {c['reason'][:60]} |")
+            continue
+        t = roofline_terms(
+            c, int8_peak=c.get("backend") in int8_peak_backends)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['backend']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{t['dominant']}** "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="benchmarks/results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.results)
+    print(format_table(cells))
+    if args.json_out:
+        enriched = []
+        for c in cells:
+            t = roofline_terms(c) if not c.get("skipped") else None
+            enriched.append({**c, "roofline": t})
+        with open(args.json_out, "w") as f:
+            json.dump(enriched, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving driver: offline-quantize a model (Table-I planes, optionally
+packed) and serve batched greedy-decode requests through the engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --w-bits 4 --kv-bits 8 --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.policy import uniform_policy
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve.engine import Request, ServeEngine, prepare_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--kv-bits", type=int, default=None)
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--backend", default="decomposed",
+                    choices=["decomposed", "pallas", "dense"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    policy = uniform_policy(args.w_bits, args.a_bits, backend=args.backend)
+    if args.backend != "dense":
+        t0 = time.time()
+        params, qpaths = prepare_params(params, policy, model,
+                                        packed=args.packed)
+        print(f"prepared {len(qpaths)} weights "
+              f"(w{args.w_bits}, packed={args.packed}) "
+              f"in {time.time()-t0:.1f}s")
+    rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced)
+    engine = ServeEngine(model, params, rt, max_batch=args.max_batch,
+                         max_len=args.max_len, kv_bits=args.kv_bits)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (assignment): per-arch cells over
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  global_batch 32    (prefill)
+    decode_32k   seq 32768,  global_batch 128   (serve_step: 1 new token,
+                                                 KV cache of seq_len)
+    long_500k    seq 524288, global_batch 1     (serve_step; sub-quadratic
+                                                 archs only)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs —
+no device allocation ever happens for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic token cost -> SSM/hybrid only
+    (DESIGN.md §long_500k)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch has no sub-quadratic "
+                       "path at seq 524288 (DESIGN.md §long_500k)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training/prefill batch stand-ins (tokens or stub-frontend embeddings)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {"labels": sds((b, s), jnp.int32)}
+    if cfg.frontend == "none":
+        out["tokens"] = sds((b, s), jnp.int32)
+    else:
+        # VLM/audio stubs: precomputed patch/frame embeddings.
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def token_specs(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.frontend == "none":
+        return {"tokens": sds((batch, seq), jnp.int32)}
+    return {"embeds": sds((batch, seq, cfg.d_model), jnp.bfloat16)}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the cell's token
+    count; decode counts one token per sequence."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens        # forward only
+    tokens = shape.global_batch        # one new token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,131 @@
+"""Architecture configuration schema for all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    # MoE
+    moe: bool = False
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1              # MoE FF every k-th layer (others dense MLP)
+    shared_expert: bool = False     # llama4-style shared expert
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm: bool = False               # attention-free (pure SSM)
+    attn_every: int = 0             # hybrid: 1 attention layer per `attn_every`
+    ssm_state: int = 128
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # modality frontend (stubbed: precomputed embeddings)
+    frontend: str = "none"          # none | vision | audio
+    dtype_str: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    def __post_init__(self):
+        if self.head_dim is None and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype_str]
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so embedding/head shard evenly over the mesh
+        (labels stay < vocab_size; pad logits train toward -inf harmlessly)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context decode is O(1)/O(layers) per token (SSM or
+        hybrid with mostly-SSM layers)."""
+        return self.ssm or self.attn_every > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def period_pattern(self) -> Tuple[Tuple[str, Optional[str]], ...]:
+        """Per-period (mixer, ff) layer pattern; the stack scans over periods.
+
+        mixer in {attn, mamba}; ff in {mlp, moe, None}."""
+        if self.ssm and self.attn_every == 0:          # pure SSM (mamba2)
+            return (("mamba", None),)
+        if self.attn_every > 0:                        # hybrid (jamba 1:7)
+            pat = []
+            for i in range(self.attn_every):
+                mixer = "attn" if i == self.attn_every - 1 else "mamba"
+                ff = "moe" if (self.moe and i % self.moe_every == self.moe_every - 1) else "mlp"
+                pat.append((mixer, ff))
+            return tuple(pat)
+        if self.moe:
+            pat = []
+            for i in range(self.moe_every):
+                ff = "moe" if i == self.moe_every - 1 else "mlp"
+                pat.append(("attn", ff))
+            return tuple(pat)
+        return (("attn", "mlp"),)
+
+    @property
+    def n_periods(self) -> int:
+        p = len(self.period_pattern())
+        assert self.num_layers % p == 0, (self.num_layers, p)
+        return self.num_layers // p
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for MODEL_FLOPS and roofline)."""
+        d, dh = self.d_model, self.head_dim or 0
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for mixer, ff in self.period_pattern() * self.n_periods:
+            if mixer == "attn":
+                n += d * (self.num_heads * dh) + 2 * d * (self.num_kv_heads * dh) \
+                    + (self.num_heads * dh) * d
+            else:
+                di, ns, hh = self.d_inner, self.ssm_state, self.ssm_heads
+                n += d * (2 * di + 2 * ns + hh) + di * d   # in_proj + out_proj
+                n += (di + 2 * ns) * self.ssm_conv + 2 * hh + di  # conv, A, dt, D
+            if ff == "mlp":
+                n += 3 * d * self.d_ff
+            elif ff == "moe":
+                n += d * self.num_experts  # router
+                n += self.num_experts * 3 * d * self.d_ff
+                if self.shared_expert:
+                    n += 3 * d * self.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        n_moe_layers = sum(1 for _, ff in self.period_pattern() * self.n_periods
+                           if ff == "moe")
+        inactive = (self.num_experts - self.experts_per_token)
+        total -= n_moe_layers * inactive * 3 * d * self.d_ff
+        return total

@@ -1,0 +1,99 @@
+"""MobileNetV2-style quantized conv net — the paper's own workload (§IV),
+runnable: pointwise (1x1) convs are matmuls and route through the paper's
+quantized backends; depthwise convs stay higher-precision conv ops (they are 7 %
+of MACs; the hwmodel keeps them 8-bit too).
+
+A reduced config trains on CPU in tests; `hwmodel.mobilenet` holds the
+full-scale MAC/energy model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetConfig:
+    num_classes: int = 10
+    width: int = 16                    # stem channels
+    # (expansion, out_channels, stride) per inverted-residual block
+    blocks: Tuple[Tuple[int, int, int], ...] = (
+        (1, 16, 1), (4, 24, 2), (4, 32, 2), (4, 64, 2))
+    input_hw: int = 32
+    dtype_str: str = "float32"
+
+    @property
+    def dtype(self):
+        return jnp.float32 if self.dtype_str == "float32" else jnp.bfloat16
+
+
+def _pw_init(key, cin, cout, dtype):
+    return layers.dense_init(key, cin, cout, dtype)
+
+
+def _dw_init(key, ch, dtype):
+    return {"w": (jax.random.normal(key, (3, 3, ch), jnp.float32)
+                  * 0.5).astype(dtype)}
+
+
+def _pointwise(params, x, rt, name):
+    """1x1 conv == matmul over channels: the paper's MAC-array work."""
+    b, h, w, c = x.shape
+    y = layers.linear(params, x.reshape(b * h * w, c), rt, name)
+    return y.reshape(b, h, w, -1)
+
+
+def _depthwise(params, x, stride):
+    ch = x.shape[-1]
+    rhs = params["w"].astype(jnp.float32).reshape(3, 3, 1, ch)
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), rhs, window_strides=(stride, stride),
+        padding="SAME", feature_group_count=ch,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+class ConvNet:
+    def __init__(self, cfg: ConvNetConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 4 * len(cfg.blocks) + 4))
+        params = {"stem": _dw_init(next(ks), 3, cfg.dtype) | {
+            "proj": _pw_init(next(ks), 3, cfg.width, cfg.dtype)}}
+        cin = cfg.width
+        blocks = []
+        for t, cout, s in cfg.blocks:
+            hidden = cin * t
+            blocks.append({
+                "expand": _pw_init(next(ks), cin, hidden, cfg.dtype),
+                "dw": _dw_init(next(ks), hidden, cfg.dtype),
+                "project": _pw_init(next(ks), hidden, cout, cfg.dtype),
+            })
+            cin = cout
+        params["blocks"] = blocks
+        params["head"] = _pw_init(next(ks), cin, cfg.num_classes, cfg.dtype)
+        return params
+
+    def apply(self, params, x, rt: layers.Runtime):
+        """x: [B, H, W, 3] -> logits [B, num_classes]."""
+        cfg = self.cfg
+        h = _depthwise(params["stem"], x, 1)
+        h = jax.nn.relu6(_pointwise(params["stem"]["proj"], h, rt, "stem"))
+        for i, ((t, cout, s), blk) in enumerate(zip(cfg.blocks,
+                                                    params["blocks"])):
+            inp = h
+            h = jax.nn.relu6(_pointwise(blk["expand"], h, rt,
+                                        f"blocks.{i}.expand"))
+            h = jax.nn.relu6(_depthwise(blk["dw"], h, s))
+            h = _pointwise(blk["project"], h, rt, f"blocks.{i}.project")
+            if s == 1 and inp.shape == h.shape:
+                h = h + inp
+        pooled = jnp.mean(h, axis=(1, 2))
+        return layers.linear(params["head"], pooled, rt, "head")

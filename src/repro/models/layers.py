@@ -1,0 +1,330 @@
+"""Model building blocks (pure-JAX, functional): norms, RoPE, quantized
+linear, flash attention (online-softmax, memory-bounded), KV caches.
+
+Every matmul routes through ``kernels.ops.matmul`` under the layer's
+``LayerPrecision`` from the model's ``PrecisionPolicy`` — the paper's
+flexible 2..8-bit precision scaling as a first-class model feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import LayerPrecision, PrecisionPolicy
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Per-call execution context threaded through the model."""
+
+    policy: PrecisionPolicy
+    mode: str = "train"                 # train | serve
+    deterministic: bool = True
+    # Dropless MoE: capacity = T (no token dropping).  Exact but wasteful;
+    # used for serving parity and small-scale tests.  Training uses the
+    # capacity-factor path (standard token-choice with dropping).
+    moe_dropless: bool = False
+
+    def prec(self, name: str) -> LayerPrecision:
+        return self.policy.lookup(name)
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16):
+    scale = 1.0 / math.sqrt(in_dim)
+    return {"w": jax.random.uniform(key, (in_dim, out_dim), jnp.float32,
+                                    -scale, scale).astype(dtype)}
+
+
+def linear(params, x, rt: Runtime, name: str):
+    """y = x @ w under the mixed-precision policy (w may be a prepared
+    QuantizedWeight for the serving path)."""
+    w = params["w"]
+    prec = rt.prec(name)
+    if isinstance(w, ops.QuantizedWeight):
+        return ops.matmul(x, None, prec.with_backend(
+            prec.backend if prec.backend in ("decomposed", "pallas")
+            else "decomposed"), qw=w)
+    y = ops.matmul(x, w, prec)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(dim: int, dtype=jnp.bfloat16):
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # Variance in f32 (a per-token scalar: sums of squares reduce locally and
+    # psum cheaply over a sharded d_model), but the normalized product stays
+    # in x.dtype so the d_model all-gather feeding the next matmul moves
+    # bf16, not f32 (§Perf iteration 2).
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return x * (inv.astype(x.dtype)) * params["g"].astype(x.dtype)
+
+
+def qk_headnorm(params, x, eps: float = 1e-6):
+    """Per-head RMSNorm over head_dim (Qwen3-style qk_norm). x: [..., H, Dh]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float = 1e6):
+    """Rotary embedding, split-half convention. x: [B, S, H, Dh]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs     # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- flash attention
+def flash_attention(q, k, v, *, causal: bool = True, block_k: int = 1024,
+                    q_offset=0):
+    """Online-softmax attention, memory bounded by block_k (the TPU analogue
+    of streaming the KV operand; never materializes the [Sq, Sk] matrix).
+
+    q: [B, Sq, H, Dh]; k, v: [B, Sk, KVH, Dh] with H % KVH == 0 (GQA).
+    q_offset: absolute position of q[0] (for chunked prefill / decode).
+    Returns [B, Sq, H, Dh] in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    if g > 1:
+        # GQA as q-head-major repeat: every tensor keeps the h axis, so TP
+        # over "model" survives (a [kvh, g] reshape would break the sharding
+        # and replicate the f32 accumulators on every device).
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).astype(jnp.float32)       # [b, h, sq, dh]
+    qf = shard(qf, "batch", "model", None, None)
+
+    block_k = min(block_k, sk)
+    nb = -(-sk // block_k)
+    pad = nb * block_k - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nb, block_k, h, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nb, block_k, h, dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(nb * block_k).reshape(nb, block_k)
+    qpos = q_offset + jnp.arange(sq)
+
+    neg = jnp.float32(-1e30)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kblk, vblk, kp_blk = xs
+        s = jnp.einsum("bhqd,bshd->bhqs", qf,
+                       kblk.astype(jnp.float32)) * scale
+        valid = kp_blk[None, :] < sk
+        if causal:
+            valid = valid & (qpos[:, None] >= kp_blk[None, :])
+        s = jnp.where(valid[None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p, vblk.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((b, h, sq, dh), jnp.float32),
+        jnp.full((b, h, sq), neg),
+        jnp.zeros((b, h, sq), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(jax.checkpoint(body), init, (kb, vb, kpos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ KV cache
+@dataclasses.dataclass
+class KVCache:
+    """Pre-allocated KV cache; optionally stored quantized (kv_bits=8) with
+    per-(position, head) scales — the paper's precision scaling applied to
+    the decode memory bottleneck (beyond-paper feature)."""
+
+    k: jax.Array          # [B, Smax, KVH, Dh]  bf16 or int8
+    v: jax.Array
+    k_scale: Optional[jax.Array]   # f32 [B, Smax, KVH, 1] when quantized
+    v_scale: Optional[jax.Array]
+    length: jax.Array     # int32 scalar — filled positions
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+    @staticmethod
+    def create(batch: int, max_len: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16, kv_bits: Optional[int] = None) -> "KVCache":
+        shape = (batch, max_len, kv_heads, head_dim)
+        if kv_bits == 8:
+            z8 = jnp.zeros(shape, jnp.int8)
+            # Scales in bf16: per-(position, head) f32 scales would cost 50%
+            # overhead per device once head_dim is TP-sharded (§Perf decode).
+            s = jnp.ones((batch, max_len, kv_heads, 1), jnp.bfloat16)
+            return KVCache(z8, z8, s, s, jnp.zeros((), jnp.int32))
+        z = jnp.zeros(shape, dtype)
+        return KVCache(z, z, None, None, jnp.zeros((), jnp.int32))
+
+    def _quant(self, x):
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127)
+        return q.astype(jnp.int8), scale.astype(self.k_scale.dtype)
+
+    def update(self, k_new, v_new, start) -> "KVCache":
+        """Insert [B, S_new, KVH, Dh] at position `start` (traced ok)."""
+        idx = (0, start, 0, 0)
+        if self.quantized:
+            kq, ks = self._quant(k_new)
+            vq, vs = self._quant(v_new)
+            return KVCache(
+                jax.lax.dynamic_update_slice(self.k, kq, idx),
+                jax.lax.dynamic_update_slice(self.v, vq, idx),
+                jax.lax.dynamic_update_slice(self.k_scale, ks, idx),
+                jax.lax.dynamic_update_slice(self.v_scale, vs, idx),
+                start + k_new.shape[1])
+        return KVCache(
+            jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), idx),
+            jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), idx),
+            None, None, start + k_new.shape[1])
+
+    def read(self, dtype=jnp.bfloat16):
+        if self.quantized:
+            k = self.k.astype(dtype) * self.k_scale.astype(dtype)
+            v = self.v.astype(dtype) * self.v_scale.astype(dtype)
+            return k, v
+        return self.k.astype(dtype), self.v.astype(dtype)
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "k_scale", "v_scale", "length"],
+    meta_fields=[])
+
+
+def decode_attention(q, cache: KVCache):
+    """Single-step attention against a cache. q: [B, 1, H, Dh].
+
+    Grouped (kvh, g) einsum form — no K/V repeat, operands stay in the cache
+    dtype (bf16/int8-dequant) with f32 accumulation via
+    preferred_element_type, so the big cache tensors are never materialized
+    in f32 and the head_dim contraction runs sharded (§Perf decode iters)."""
+    b, sq, h, dh = q.shape
+    k, v = cache.read(q.dtype)
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kvh, g, dh)
+    # Match the cache's head_dim TP sharding: the contraction then runs as
+    # sharded partial sums + a 33MB score psum instead of all-gathering the
+    # multi-GB K (§Perf decode iteration).
+    qg = shard(qg, "batch", None, None, None, "model")
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(sk)
+    s = jnp.where((pos < cache.length)[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------- GQA attention
+def attention_init(key, cfg, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 4)
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "q_proj": dense_init(keys[0], d, h * dh, dtype),
+        "k_proj": dense_init(keys[1], d, kvh * dh, dtype),
+        "v_proj": dense_init(keys[2], d, kvh * dh, dtype),
+        "o_proj": dense_init(keys[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"g": jnp.ones((dh,), dtype)}
+        p["k_norm"] = {"g": jnp.ones((dh,), dtype)}
+    return p
+
+
+def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
+                    positions=None, cache: Optional[KVCache] = None,
+                    cache_start=None):
+    """GQA attention with RoPE (+ optional qk_norm).  If `cache` is given,
+    runs in incremental mode (appends k/v at cache_start, attends to cache).
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        if cache_start is not None:
+            base = cache_start
+        elif cache is not None:
+            base = cache.length          # append at the current fill point
+        else:
+            base = 0
+        positions = base + jnp.arange(s)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (b, s))
+
+    q = linear(params["q_proj"], x, rt, f"{name}.q_proj").reshape(b, s, h, dh)
+    k = linear(params["k_proj"], x, rt, f"{name}.k_proj").reshape(b, s, kvh, dh)
+    v = linear(params["v_proj"], x, rt, f"{name}.v_proj").reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = qk_headnorm(params["q_norm"], q)
+        k = qk_headnorm(params["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = cache.update(k, v, cache.length if cache_start is None
+                                 else cache_start)
+        if s == 1:
+            out = decode_attention(q, new_cache)
+        else:
+            kf, vf = new_cache.read(q.dtype)
+            out = flash_attention(q, kf, vf, causal=True,
+                                  q_offset=new_cache.length - s)
+    else:
+        out = flash_attention(q, k, v, causal=True)
+    out = out.reshape(b, s, h * dh)
+    return linear(params["o_proj"], out, rt, f"{name}.o_proj"), new_cache
+
+
+# ----------------------------------------------------------------- SwiGLU MLP
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate_proj": dense_init(k1, d_model, d_ff, dtype),
+        "up_proj": dense_init(k2, d_model, d_ff, dtype),
+        "down_proj": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params, x, rt: Runtime, name: str):
+    gate = linear(params["gate_proj"], x, rt, f"{name}.gate_proj")
+    up = linear(params["up_proj"], x, rt, f"{name}.up_proj")
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    hidden = shard(hidden, "batch", None, "model")
+    return linear(params["down_proj"], hidden, rt, f"{name}.down_proj")

@@ -1,0 +1,118 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based dispatch.
+
+Expert FFN weights route through the paper's quantized-matmul backends
+(vmapped over the expert axis); the router stays high-precision
+(DESIGN.md §Arch-applicability).  Experts shard over the mesh "model" axis
+(EP) when the expert count divides it, otherwise fall back to 2D TP
+sharding of the expert FFN dims — both expressed in
+``distributed.sharding_rules``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_mesh, mesh_divides, shard
+from repro.models import layers
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    import math
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02},
+        "gate_proj": {"w": jax.random.uniform(ks[1], (e, d, f), jnp.float32,
+                                              -s_in, s_in).astype(dtype)},
+        "up_proj": {"w": jax.random.uniform(ks[2], (e, d, f), jnp.float32,
+                                            -s_in, s_in).astype(dtype)},
+        "down_proj": {"w": jax.random.uniform(ks[3], (e, f, d), jnp.float32,
+                                              -s_out, s_out).astype(dtype)},
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.mlp_init(ks[4], d, f, dtype)
+    return p
+
+
+def _expert_ffn(params, xe, rt: layers.Runtime, name: str):
+    """xe: [E, B, C, d] -> [E, B, C, d] through per-expert SwiGLU, quantized."""
+    def one(w_gate, w_up, w_down, x):
+        gate = layers.linear({"w": w_gate}, x, rt, f"{name}.gate_proj")
+        up = layers.linear({"w": w_up}, x, rt, f"{name}.up_proj")
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        return layers.linear({"w": w_down}, h, rt, f"{name}.down_proj")
+
+    return jax.vmap(one)(params["gate_proj"]["w"], params["up_proj"]["w"],
+                         params["down_proj"]["w"], xe)
+
+
+def moe_apply(params, x, rt: layers.Runtime, cfg, name: str):
+    """Returns (y, aux_loss).  x: [B, S, d].
+
+    Dispatch is PER SEQUENCE (vmapped over the batch dim): every scatter /
+    gather carries a leading batch dimension, so GSPMD shards it over the
+    data axis instead of replicating (a flat global-token scatter forces
+    involuntary full rematerialization at 1M+ tokens).  Capacity is therefore
+    per-sequence: C = round(S * k * cf / E)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    # Router in f32 (kept dense — not matmul-array work in the paper's sense).
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # [B, S, E]
+    top_w, top_i = jax.lax.top_k(probs, k)                        # [B, S, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    density = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32),
+                       axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+
+    if rt.moe_dropless:
+        capacity = s          # worst case: a whole sequence to one expert
+    else:
+        capacity = int(max(1, round(s * k * cfg.capacity_factor / e)))
+    capacity = min(capacity, s)
+
+    # Position of each (token, slot) within its expert, per sequence.
+    flat_e = top_i.reshape(b, s * k)                              # [B, S*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # [B, S*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos_in_e, e * capacity)
+
+    # Dispatch: batched scatter into [B, E*C (+1 overflow), d].
+    x_rep = jnp.repeat(x, k, axis=1)                              # [B, S*k, d]
+    x_rep = jnp.where(keep[..., None], x_rep, 0)
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, sl, xv: bf.at[sl].add(xv))(buf, slot, x_rep)
+    xe = buf[:, : e * capacity].reshape(b, e, capacity, d)
+    xe = xe.transpose(1, 0, 2, 3)                                 # [E,B,C,d]
+    # EP when experts divide the model axis, else keep batch-sharded with
+    # d_model TP'd so the buffer never replicates.
+    ep = mesh_divides(current_mesh(), e, "expert")
+    xe = shard(xe, "expert", "batch", None, None) if ep \
+        else shard(xe, None, "batch", None, "model")
+
+    ye = _expert_ffn(params, xe, rt, name)
+    ye = shard(ye, "expert", "batch", None, None) if ep \
+        else shard(ye, None, "batch", None, "model")
+
+    # Combine: batched gather of each slot's output, weighted.
+    yr = ye.transpose(1, 0, 2, 3).reshape(b, e * capacity, d)
+    pad = jnp.zeros((b, 1, d), ye.dtype)
+    yr = jnp.concatenate([yr, pad], axis=1)                       # overflow row
+    y_tok = jax.vmap(lambda row, sl: row[sl])(yr, slot)           # [B, S*k, d]
+    y_tok = y_tok.astype(jnp.float32) * top_w.reshape(b, s * k)[..., None]
+    y = y_tok.reshape(b, s, k, d).sum(axis=2).astype(x.dtype)
+    y = shard(y, "batch", None, None)
+
+    if cfg.shared_expert:
+        y = y + layers.mlp_apply(params["shared"], x, rt, f"{name}.shared")
+    return y, aux

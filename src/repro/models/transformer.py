@@ -1,0 +1,169 @@
+"""Decoder-only LM stack covering all assigned families: dense, MoE, hybrid
+(Mamba+attention interleave), pure SSM, and stub-fronted VLM/audio backbones.
+
+The stack scans over *periods* (cfg.period_pattern()) with stacked params, so
+a 72-layer hybrid compiles as a 9-step scan over a static 8-layer body —
+small HLO, layer-granular remat, and per-period stacked KV/SSM caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers, moe, ssm
+from repro.models.config import ArchConfig
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.pattern = cfg.period_pattern()
+
+    # ------------------------------------------------------------------ init
+    def _period_init(self, key):
+        cfg = self.cfg
+        p: Dict[str, Any] = {}
+        ks = jax.random.split(key, 4 * len(self.pattern))
+        for i, (mixer, ff) in enumerate(self.pattern):
+            blk: Dict[str, Any] = {"mixer_norm": layers.rmsnorm_init(cfg.d_model, cfg.dtype)}
+            if mixer == "attn":
+                blk["attn"] = layers.attention_init(ks[4 * i], cfg, cfg.dtype)
+            else:
+                blk["mamba"] = ssm.ssm_init(ks[4 * i], cfg, cfg.dtype)
+            if ff is not None:
+                blk["ff_norm"] = layers.rmsnorm_init(cfg.d_model, cfg.dtype)
+                if ff == "mlp":
+                    blk["mlp"] = layers.mlp_init(ks[4 * i + 1], cfg.d_model,
+                                                 cfg.d_ff, cfg.dtype)
+                else:
+                    blk["moe"] = moe.moe_init(ks[4 * i + 1], cfg, cfg.dtype)
+            p[f"pos{i}"] = blk
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_per, k_head = jax.random.split(key, 3)
+        period_keys = jax.random.split(k_per, cfg.n_periods)
+        periods = jax.vmap(self._period_init)(period_keys)
+        params = {
+            "embed": {"emb": (jax.random.normal(
+                k_emb, (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02
+            ).astype(cfg.dtype)},
+            "periods": periods,
+            "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.dense_init(
+                k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype)
+        return params
+
+    # ------------------------------------------------------------- internals
+    def _embed(self, params, tokens=None, embeds=None):
+        if embeds is not None:
+            return embeds.astype(self.cfg.dtype)
+        return jnp.take(params["embed"]["emb"], tokens, axis=0)
+
+    def _head(self, params, x, rt: layers.Runtime):
+        x = layers.rmsnorm(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["emb"].T
+            logits = jnp.matmul(x, w.astype(x.dtype))
+        else:
+            logits = layers.linear(params["lm_head"], x, rt, "lm_head")
+        return shard(logits, "batch", None, "model")
+
+    def _period_body(self, blk_params, x, rt, caches=None):
+        cfg = self.cfg
+        new_caches: Dict[str, Any] = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, (mixer, ff) in enumerate(self.pattern):
+            blk = blk_params[f"pos{i}"]
+            c = None if caches is None else caches.get(f"pos{i}")
+            h = layers.rmsnorm(blk["mixer_norm"], x)
+            if mixer == "attn":
+                out, nc = layers.attention_apply(
+                    blk["attn"], h, rt, cfg, f"layers.pos{i}.attn", cache=c)
+            else:
+                out, nc = ssm.ssm_apply(
+                    blk["mamba"], h, rt, cfg, f"layers.pos{i}.mamba", cache=c)
+            x = x + out
+            if caches is not None:
+                new_caches[f"pos{i}"] = nc
+            if ff is not None:
+                h2 = layers.rmsnorm(blk["ff_norm"], x)
+                if ff == "mlp":
+                    out2 = layers.mlp_apply(blk["mlp"], h2, rt,
+                                            f"layers.pos{i}.mlp")
+                else:
+                    out2, a = moe.moe_apply(blk["moe"], h2, rt, cfg,
+                                            f"layers.pos{i}.moe")
+                    aux = aux + a
+                x = x + out2
+        # Residual stream sharded 2D (batch x d_model): the scan carry is what
+        # autodiff saves per period, so sharding d_model over "model" cuts the
+        # saved-activation footprint 16x (Megatron-SP-style).
+        x = shard(x, "batch", None, "model")
+        return x, aux, new_caches
+
+    def _stack(self, params, x, rt, caches=None):
+        if caches is None:
+            def body(carry, pp):
+                xx, aux = carry
+                xx, a, _ = self._period_body(pp, xx, rt)
+                return (xx, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)),
+                params["periods"])
+            return x, aux, None
+
+        def body(carry, xs):
+            xx, aux = carry
+            pp, pc = xs
+            xx, a, nc = self._period_body(pp, xx, rt, caches=pc)
+            return (xx, aux + a), nc
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["periods"], caches))
+        return x, aux, new_caches
+
+    # ---------------------------------------------------------------- public
+    def forward(self, params, rt: layers.Runtime, tokens=None, embeds=None):
+        """Full-sequence forward (training / no-cache prefill).
+        Returns (logits [B, S, V], aux_loss)."""
+        x = self._embed(params, tokens, embeds)
+        x = shard(x, "batch", None, None)
+        x, aux, _ = self._stack(params, x, rt)
+        return self._head(params, x, rt), aux
+
+    def init_cache(self, batch: int, max_len: int, kv_bits: Optional[int] = None):
+        """Per-period stacked caches for every cache-bearing position."""
+        cfg = self.cfg
+        single: Dict[str, Any] = {}
+        for i, (mixer, _) in enumerate(self.pattern):
+            if mixer == "attn":
+                single[f"pos{i}"] = layers.KVCache.create(
+                    batch, max_len, cfg.num_kv_heads, cfg.head_dim,
+                    dtype=cfg.dtype, kv_bits=kv_bits)
+            else:
+                single[f"pos{i}"] = ssm.SSMCache.create(batch, cfg)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), single)
+
+    def prefill(self, params, rt, caches, tokens=None, embeds=None):
+        """Run the prompt through the stack, filling caches.
+        Returns (last-position logits [B, 1, V], new caches)."""
+        x = self._embed(params, tokens, embeds)
+        x = shard(x, "batch", None, None)
+        x, _, new_caches = self._stack(params, x, rt, caches=caches)
+        return self._head(params, x[:, -1:], rt), new_caches
+
+    def decode_step(self, params, rt, caches, tokens=None, embeds=None):
+        """One-token decode against filled caches.
+        Returns (logits [B, 1, V], new caches)."""
+        x = self._embed(params, tokens, embeds)
+        x, _, new_caches = self._stack(params, x, rt, caches=caches)
+        return self._head(params, x, rt), new_caches

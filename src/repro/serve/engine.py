@@ -1,0 +1,124 @@
+"""Batched serving engine: slot-based continuous batching with jit'd
+prefill/decode and quantized weights (the paper's inference path).
+
+Weights are prepared ONCE into decomposed integer planes
+(``prepare_params``) — the analogue of preloading the array — then every
+matmul in prefill/decode runs the plane-decomposed integer path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+
+
+def prepare_params(params, policy: PrecisionPolicy, model: LM,
+                   packed: bool = False):
+    """Quantize + decompose every policy-covered projection weight offline.
+
+    Returns a params pytree where 2D projection weights are replaced by
+    QuantizedWeight planes (embeddings/norms stay dense)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    quantized_paths = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        is_proj = path.endswith("['w']") and leaf.ndim >= 2 \
+            and "embed" not in path and "router" not in path \
+            and "conv" not in path
+        if is_proj:
+            name = _path_to_layer_name(path)
+            prec = policy.lookup(name)
+            if leaf.ndim == 2:
+                qw = ops.prepare_weight(leaf.astype(jnp.float32), prec,
+                                        packed=packed)
+                out.append(qw)
+                quantized_paths.append(path)
+                continue
+            # Stacked (periods / experts) weights: vmap preparation over
+            # leading dims.
+            lead = leaf.shape[:-2]
+            w2 = leaf.reshape((-1,) + leaf.shape[-2:]).astype(jnp.float32)
+            qws = jax.vmap(lambda w: ops.prepare_weight(w, prec,
+                                                        packed=packed))(w2)
+            qws = jax.tree.map(
+                lambda a: a.reshape(lead + a.shape[1:]), qws)
+            out.append(qws)
+            quantized_paths.append(path)
+            continue
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), quantized_paths
+
+
+def _path_to_layer_name(path: str) -> str:
+    # "['periods']['pos0']['attn']['q_proj']['w']" -> "layers.pos0.attn.q_proj"
+    parts = [p.strip("'") for p in path.strip("[]").split("][")]
+    if parts and parts[0] == "periods":
+        parts = ["layers"] + parts[1:]
+    if parts and parts[-1] == "w":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching: admit up to `max_batch` requests,
+    prefill the batch, greedy-decode until every slot finishes, refill."""
+
+    def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
+                 max_len: int = 512, kv_bits: Optional[int] = None):
+        self.model = model
+        self.rt = rt
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.kv_bits = kv_bits
+        self._prefill = jax.jit(
+            lambda p, c, t: model.prefill(p, rt, c, tokens=t))
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, rt, c, tokens=t))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        results: Dict[int, List[int]] = {}
+        queue = list(requests)
+        while queue:
+            batch = queue[: self.max_batch]
+            queue = queue[self.max_batch:]
+            results.update(self._run_batch(batch))
+        return results
+
+    def _run_batch(self, batch: List[Request]) -> Dict[int, List[int]]:
+        b = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        caches = self.model.init_cache(b, self.max_len, kv_bits=self.kv_bits)
+        logits, caches = self._prefill(self.params, caches,
+                                       jnp.asarray(prompts))
+        max_new = max(r.max_new_tokens for r in batch)
+        outs = [[] for _ in range(b)]
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for step in range(max_new):
+            for i, r in enumerate(batch):
+                if step < r.max_new_tokens:
+                    outs[i].append(int(tok[i]))
+            logits, caches = self._decode(self.params, caches, tok[:, None])
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return {r.uid: outs[i][: r.max_new_tokens]
+                for i, r in enumerate(batch)}

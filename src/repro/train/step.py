@@ -1,0 +1,96 @@
+"""Train/serve step factories — the functions the launcher jits with
+in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.train import optimizer as optim
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in f32.  logits: [B, S, V] (any float dtype)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(model: LM, rt: Runtime, aux_weight: float = 0.01):
+    def loss_fn(params, batch: Dict[str, Any]):
+        logits, aux = model.forward(
+            params, rt,
+            tokens=batch.get("tokens") if "embeds" not in batch else None,
+            embeds=batch.get("embeds"))
+        ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        loss = ce + aux_weight * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model: LM, rt: Runtime, opt_cfg: optim.OptConfig,
+                    accum_steps: int = 1, aux_weight: float = 0.01):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}.  With accum_steps > 1 the batch
+    leading dim is split into microbatches reduced by a scan (grad
+    accumulation for memory-bound training)."""
+    loss_fn = make_loss_fn(model, rt, aux_weight)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def micro(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, grads)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        micro_batch = jax.tree.map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": jnp.zeros(()), "ce": jnp.zeros(()), "aux": jnp.zeros(())}
+        (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), micro_batch)
+        inv = 1.0 / accum_steps
+        return (jax.tree.map(lambda g: g * inv, grads),
+                jax.tree.map(lambda m: m * inv, metrics))
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        params, opt, opt_metrics = optim.apply_updates(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics.update(opt_metrics)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_serve_steps(model: LM, rt: Runtime):
+    """Returns (prefill_fn, decode_fn) for the serving engine / dry-run.
+
+    decode_fn(params, caches, tokens|embeds) -> (logits [B,1,V], caches) —
+    this is what the decode_* and long_* dry-run cells lower."""
+
+    def prefill_fn(params, caches, tokens=None, embeds=None):
+        return model.prefill(params, rt, caches, tokens=tokens, embeds=embeds)
+
+    def decode_fn(params, caches, tokens=None, embeds=None):
+        return model.decode_step(params, rt, caches, tokens=tokens,
+                                 embeds=embeds)
+
+    return prefill_fn, decode_fn

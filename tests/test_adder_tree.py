@@ -1,0 +1,33 @@
+"""CSA split-path adder tree functional contract (paper §III-C)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adder_tree
+
+
+@given(st.lists(st.lists(st.integers(-4, 3), min_size=64, max_size=64),
+                min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_split_tree_equals_sum(rows):
+    p = np.asarray(rows, np.int32)
+    got = adder_tree.csa_tree_sum(p, axis=-1)
+    assert np.array_equal(np.asarray(got), p.sum(-1))
+
+
+@given(st.lists(st.integers(0, 3), min_size=8, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_unsigned_msb_path_quiet(vals):
+    """Unsigned products (2-bit, in [0,3]) leave the MSB path all-zero —
+    the mechanism behind the Table-II unsigned power saving."""
+    p = np.asarray(vals, np.int32)
+    msb, low2 = adder_tree.split_products(p)
+    assert np.asarray(msb).sum() == 0
+    assert float(adder_tree.msb_path_activity(p)) == 0.0
+    assert np.array_equal(np.asarray(adder_tree.csa_tree_sum(p)), p.sum())
+
+
+def test_signed_msb_weight_is_minus_four():
+    p = np.asarray([-4], np.int32)
+    msb, low2 = adder_tree.split_products(p)
+    assert int(np.asarray(msb)[0]) == 1 and int(np.asarray(low2)[0]) == 0
+    assert int(np.asarray(adder_tree.csa_tree_sum(p))) == -4

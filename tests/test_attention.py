@@ -1,0 +1,86 @@
+"""Flash attention vs the naive softmax oracle (property-based)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import KVCache, decode_attention, flash_attention
+
+
+def naive_attention(q, k, v, causal=True, q_offset=0):
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    kf = np.repeat(np.asarray(k, np.float32), g, axis=2)
+    vf = np.repeat(np.asarray(v, np.float32), g, axis=2)
+    qf = np.asarray(q, np.float32)
+    s = np.einsum("bqhd,bshd->bhqs", qf, kf) / math.sqrt(dh)
+    if causal:
+        qpos = q_offset + np.arange(sq)[:, None]
+        kpos = np.arange(sk)[None, :]
+        s = np.where(qpos >= kpos, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vf)
+
+
+@given(sq=st.integers(1, 9), sk_extra=st.integers(0, 7),
+       h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+       block_k=st.sampled_from([2, 3, 8]), seed=st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_flash_matches_naive(sq, sk_extra, h, g, block_k, seed):
+    rng = np.random.default_rng(seed)
+    kvh = h // g if h % g == 0 else h
+    sk = sq + sk_extra
+    dh = 8
+    q = rng.normal(size=(2, sq, h, dh)).astype(np.float32)
+    k = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
+    v = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
+    q_offset = sk - sq           # q appended at the end (prefill chunking)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
+        block_k=block_k, q_offset=q_offset), np.float32)
+    want = naive_attention(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_flash_noncausal():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(1, 5, 2, 8)).astype(np.float32)
+    k = rng.normal(size=(1, 11, 2, 8)).astype(np.float32)
+    v = rng.normal(size=(1, 11, 2, 8)).astype(np.float32)
+    got = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), causal=False,
+                                     block_k=4), np.float32)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_naive():
+    rng = np.random.default_rng(1)
+    b, sk, kvh, dh, g = 2, 12, 2, 8, 2
+    h = kvh * g
+    cache = KVCache.create(b, max_len=16, kv_heads=kvh, head_dim=dh,
+                           dtype=jnp.float32)
+    k = rng.normal(size=(b, sk, kvh, dh)).astype(np.float32)
+    v = rng.normal(size=(b, sk, kvh, dh)).astype(np.float32)
+    cache = cache.update(jnp.asarray(k), jnp.asarray(v), 0)
+    q = rng.normal(size=(b, 1, h, dh)).astype(np.float32)
+    got = np.asarray(decode_attention(jnp.asarray(q), cache), np.float32)
+    want = naive_attention(q, k, v, causal=True, q_offset=sk - 1)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=1e-3)
+
+
+def test_kv_cache_quantization_error_bounded():
+    rng = np.random.default_rng(2)
+    cache = KVCache.create(1, 8, 2, 16, kv_bits=8)
+    k = rng.normal(size=(1, 8, 2, 16)).astype(np.float32)
+    v = rng.normal(size=(1, 8, 2, 16)).astype(np.float32)
+    cache = cache.update(jnp.asarray(k), jnp.asarray(v), 0)
+    kd, vd = cache.read(jnp.float32)
+    # per-(pos, head) int8: error within ~1 bf16-scale LSB of the row max
+    err = np.abs(np.asarray(kd) - k).max()
+    assert err < np.abs(k).max() / 127 * 1.6

@@ -1,0 +1,40 @@
+"""Property tests: Eq. (1) bit-serial MAC semantics (paper §III-B)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitserial, decompose
+
+
+@given(w_bits=st.integers(2, 8), a_bits=st.integers(2, 8),
+       w_signed=st.booleans(), a_signed=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_eq1_equals_integer_dot(w_bits, a_bits, w_signed, a_signed, seed):
+    rng = np.random.default_rng(seed)
+    wlo, whi = decompose.weight_range(w_bits, w_signed)
+    alo, ahi = decompose.weight_range(a_bits, a_signed)
+    w = rng.integers(wlo, whi + 1, size=(9, 5))
+    a = rng.integers(alo, ahi + 1, size=(3, 9))
+    got = bitserial.bitserial_mac(a, w, a_bits, w_bits,
+                                  a_signed=a_signed, w_signed=w_signed)
+    want = a.astype(np.int64) @ w.astype(np.int64)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_sign_bit_plane_is_negative():
+    bits, weights = bitserial.activation_bitplanes(
+        np.array([-3], np.int32), 4, signed=True)
+    assert list(np.asarray(weights)) == [1, 2, 4, -8]
+    # -3 = 0b1101 two's complement in 4 bits
+    assert list(np.asarray(bits)[:, 0]) == [1, 0, 1, 1]
+
+
+def test_unsigned_plane_weights_all_positive():
+    _, weights = bitserial.activation_bitplanes(
+        np.array([7], np.int32), 4, signed=False)
+    assert list(np.asarray(weights)) == [1, 2, 4, 8]
+
+
+def test_cycle_counts():
+    assert bitserial.cycles_per_mac(8) == 8
+    assert bitserial.shift_add_clock_divider(8) == 8  # clk_SA = clk/8

@@ -1,0 +1,65 @@
+"""Property tests: Table-I weight decomposition (paper §III-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose
+
+
+BITS = st.integers(min_value=2, max_value=8)
+
+
+@given(bits=BITS, signed=st.booleans(), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_roundtrip(bits, signed, data):
+    lo, hi = decompose.weight_range(bits, signed)
+    w = data.draw(st.lists(st.integers(lo, hi), min_size=1, max_size=64))
+    w = np.asarray(w, np.int32)
+    planes = decompose.decompose_weights(w, bits, signed=signed)
+    back = decompose.recompose_weights(planes, bits, signed=signed)
+    assert np.array_equal(np.asarray(back), w)
+
+
+@given(bits=BITS, signed=st.booleans(), data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_plane_value_ranges(bits, signed, data):
+    """Every plane stays within its Table-I mode range: non-MSB planes are
+    unsigned 2-bit; the MSB plane is signed 2- or 3-bit (or unsigned)."""
+    lo, hi = decompose.weight_range(bits, signed)
+    w = np.asarray(data.draw(st.lists(st.integers(lo, hi), min_size=4,
+                                      max_size=64)), np.int32)
+    planes = np.asarray(decompose.decompose_weights(w, bits, signed=signed))
+    for c in range(planes.shape[0]):
+        plo, phi = decompose.plane_value_range(bits, c, signed)
+        assert planes[c].min() >= plo and planes[c].max() <= phi
+
+
+def test_schedule_matches_table1():
+    assert decompose.DECOMP_SCHEDULE == {
+        2: (2,), 3: (3,), 4: (2, 2), 5: (3, 2), 6: (2, 2, 2),
+        7: (3, 2, 2), 8: (2, 2, 2, 2)}
+
+
+def test_plane_shifts_are_2c():
+    for bits in decompose.SUPPORTED_BITS:
+        p = decompose.num_planes(bits)
+        assert decompose.plane_shifts(bits) == tuple(2 * c for c in range(p))
+
+
+def test_only_msb_plane_is_3bit():
+    for bits, widths in decompose.DECOMP_SCHEDULE.items():
+        assert all(w == 2 for w in widths[1:])
+        assert widths[0] in (2, 3)
+
+
+@given(bits=BITS)
+@settings(max_examples=10, deadline=None)
+def test_decomposed_matmul_exact(bits):
+    rng = np.random.default_rng(bits)
+    lo, hi = decompose.weight_range(bits, True)
+    w = rng.integers(lo, hi + 1, size=(23, 11))
+    x = rng.integers(-128, 128, size=(5, 23))
+    planes = decompose.decompose_weights(w, bits)
+    got = decompose.decomposed_matmul(x, planes, bits)
+    assert np.array_equal(np.asarray(got),
+                          x.astype(np.int64) @ w.astype(np.int64))

@@ -1,0 +1,138 @@
+"""Per-arch smoke tests (reduced configs) + serving parity + KV quant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.core.policy import uniform_policy
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.train import optimizer as optim
+from repro.train.step import make_train_step
+
+RT_QAT = Runtime(policy=uniform_policy(4, 8, backend="fake_quant"),
+                 moe_dropless=True)
+RT_EXACT = Runtime(policy=uniform_policy(8, 8, backend="dense"),
+                   moe_dropless=True)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "none":
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    emb = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"embeds": emb, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on CPU: shapes + no NaNs (assignment)."""
+    cfg = reduced_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, RT_QAT, tokens=batch.get("tokens"),
+                                embeds=batch.get("embeds"))
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    ocfg = optim.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = make_train_step(model, RT_QAT, ocfg)
+    state = {"params": params, "opt": optim.init_state(params, ocfg)}
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "grok-1-314b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b", "pixtral-12b"])
+def test_decode_matches_full_forward(arch):
+    cfg = reduced_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    b, s = 2, 12
+    batch = _batch(cfg, b, s, seed=7)
+    kw = ({"tokens": batch["tokens"]} if "tokens" in batch
+          else {"embeds": batch["embeds"]})
+    full, _ = model.forward(params, RT_EXACT, **kw)
+    cache = model.init_cache(b, max_len=32)
+    if "tokens" in kw:
+        pre = {"tokens": kw["tokens"][:, :-1]}
+        dec = {"tokens": kw["tokens"][:, -1:]}
+    else:
+        pre = {"embeds": kw["embeds"][:, :-1]}
+        dec = {"embeds": kw["embeds"][:, -1:]}
+    logits_p, cache = model.prefill(params, RT_EXACT, cache, **pre)
+    logits_d, cache = model.decode_step(params, RT_EXACT, cache, **dec)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0], np.float32),
+                               np.asarray(full[:, -2], np.float32),
+                               atol=1e-3)
+    # Decode attention / SSM state updates run on bf16 operands with f32
+    # accumulation (the serving-efficient form); vs the f32-heavy full
+    # forward that is ~1e-2..3e-2 on logits.
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=3e-2)
+
+
+def test_quantized_kv_cache_close():
+    """int8 KV cache decode stays close to bf16-cache decode."""
+    cfg = reduced_config("qwen3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+    outs = {}
+    for kv_bits in (None, 8):
+        cache = model.init_cache(2, max_len=32, kv_bits=kv_bits)
+        _, cache = model.prefill(params, RT_EXACT, cache,
+                                 tokens=toks[:, :-1])
+        logits, _ = model.decode_step(params, RT_EXACT, cache,
+                                      tokens=toks[:, -1:])
+        outs[kv_bits] = np.asarray(logits, np.float32)
+    denom = np.abs(outs[None]).max()
+    assert np.abs(outs[8] - outs[None]).max() / denom < 0.05
+
+
+def test_full_configs_match_assignment():
+    """Exact full-size config values from the assignment table."""
+    q = get_config("qwen3-8b")
+    assert (q.num_layers, q.d_model, q.num_heads, q.num_kv_heads,
+            q.d_ff, q.vocab_size) == (36, 4096, 32, 8, 12288, 151936)
+    assert q.qk_norm
+    j = get_config("jamba-1.5-large-398b")
+    assert (j.num_layers, j.d_model, j.num_experts, j.experts_per_token) \
+        == (72, 8192, 16, 2)
+    assert j.attn_every == 8 and j.ssm
+    g = get_config("grok-1-314b")
+    assert (g.num_experts, g.experts_per_token, g.d_ff) == (8, 2, 32768)
+    m = get_config("mamba2-1.3b")
+    assert m.ssm and m.num_heads == 0 and m.ssm_state == 128
+    mg = get_config("musicgen-large")
+    assert mg.num_kv_heads == mg.num_heads == 32 and mg.vocab_size == 2048
+
+
+def test_param_counts_plausible():
+    """Param counts should land near the models' nameplate sizes."""
+    approx = {
+        "qwen3-8b": (8e9, 0.35),
+        "grok-1-314b": (314e9, 0.15),
+        "jamba-1.5-large-398b": (398e9, 0.15),
+        "mamba2-1.3b": (1.3e9, 0.35),
+        "pixtral-12b": (12e9, 0.35),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n)
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = reduced_config("grok-1-314b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    _, aux = model.forward(params, RT_QAT, tokens=batch["tokens"])
+    assert float(aux) > 0

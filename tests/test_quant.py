@@ -1,0 +1,64 @@
+"""Quantization + QAT fake-quant (STE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@given(bits=st.integers(2, 8), signed=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_error_bound(bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    cfg = quant.QuantConfig(bits=bits, signed=signed, per_channel=False)
+    q, s = quant.quantize(jnp.asarray(x), cfg)
+    back = np.asarray(quant.dequantize(q, s))
+    # Max error bounded by half an LSB of the symmetric quantizer.
+    assert np.abs(back - x).max() <= float(s) * 0.5 + 1e-6
+
+
+def test_per_channel_scales():
+    x = np.stack([np.ones(8), 100 * np.ones(8)], axis=1).astype(np.float32)
+    cfg = quant.QuantConfig(bits=8, per_channel=True, channel_axis=-1)
+    q, s = quant.quantize(jnp.asarray(x), cfg)
+    assert s.shape == (1, 2)
+    assert float(s[0, 1]) == pytest.approx(100 * float(s[0, 0]), rel=1e-5)
+
+
+def test_ste_gradient_passes_in_range():
+    cfg = quant.QuantConfig(bits=4, per_channel=False)
+    # strictly inside [qmin*scale, qmax*scale] = [-0.8, 0.7]
+    x = jnp.linspace(-0.6, 0.6, 16)
+
+    def f(x):
+        return jnp.sum(quant.fake_quant(x, cfg, scale=jnp.float32(0.1)))
+
+    g = jax.grad(f)(x)
+    assert np.allclose(np.asarray(g), 1.0)  # straight-through inside range
+
+
+def test_ste_gradient_clips_out_of_range():
+    cfg = quant.QuantConfig(bits=4, per_channel=False)
+
+    def f(x):
+        return jnp.sum(quant.fake_quant(x, cfg, scale=jnp.float32(0.1)))
+
+    g = jax.grad(f)(jnp.asarray([100.0, -100.0]))
+    assert np.allclose(np.asarray(g), 0.0)  # clipped region: zero grad
+
+
+def test_int_matmul_dequant_close_to_float():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 8)).astype(np.float32)
+    xq, xs = quant.quantize(jnp.asarray(x), quant.QuantConfig(per_channel=False))
+    wq, ws = quant.quantize(jnp.asarray(w), quant.QuantConfig())
+    y = np.asarray(quant.int_matmul_dequant(xq, wq, xs, ws))
+    rel = np.abs(y - x @ w).max() / np.abs(x @ w).max()
+    assert rel < 0.02

@@ -1,0 +1,53 @@
+"""Roofline term derivation + report formatting."""
+import pytest
+
+from repro.launch import roofline
+
+
+def _cell(flops=1e12, byts=1e12, coll=1e10, f32_coll=0.0, chips=256,
+          model_flops=1e15):
+    return {
+        "skipped": False, "arch": "x", "shape": "train_4k", "mesh": "16x16",
+        "backend": "fake_quant", "n_devices": chips,
+        "flops": flops, "bytes_accessed": byts,
+        "collectives": {"total_bytes": coll, "f32_bytes": f32_coll},
+        "model_flops": model_flops,
+    }
+
+
+def test_terms_and_dominance():
+    t = roofline.roofline_terms(_cell(flops=197e12, byts=819e9, coll=50e9))
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t2 = roofline.roofline_terms(_cell(byts=8190e9))
+    assert t2["dominant"] == "memory"
+
+
+def test_tpu_adjusted_collective():
+    t = roofline.roofline_terms(_cell(coll=100e9, f32_coll=100e9))
+    # all-f32 collectives: TPU-native (bf16) moves half
+    assert t["collective_tpu_adj_s"] == pytest.approx(
+        t["collective_s"] / 2)
+
+
+def test_useful_ratio_and_fraction():
+    c = _cell(flops=2e12, chips=100, model_flops=1e14)
+    t = roofline.roofline_terms(c)
+    assert t["useful_ratio"] == pytest.approx(1e14 / 2e14)
+    assert 0 < t["roofline_fraction"] <= 1.0
+
+
+def test_int8_peak_halves_compute_term():
+    c = _cell()
+    a = roofline.roofline_terms(c, int8_peak=False)
+    b = roofline.roofline_terms(c, int8_peak=True)
+    assert b["compute_s"] == pytest.approx(a["compute_s"] / 2)
+
+
+def test_skipped_cells_render():
+    cells = [{"skipped": True, "arch": "a", "shape": "long_500k",
+              "mesh": "16x16", "reason": "pure full-attention"},
+             _cell()]
+    table = roofline.format_table(cells)
+    assert "SKIP" in table and "**memory**" in table or "**" in table

@@ -1,0 +1,85 @@
+"""Heartbeat supervisor: dead-node detection, straggler eviction, re-mesh."""
+from repro.launch.supervisor import Supervisor, SupervisorConfig
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _fleet(n=4, timeout=10.0, patience=2):
+    clock = FakeClock()
+    sup = Supervisor(SupervisorConfig(heartbeat_timeout_s=timeout,
+                                      straggler_factor=2.0,
+                                      straggler_patience=patience,
+                                      min_workers=1), clock=clock)
+    for i in range(n):
+        sup.register(i)
+    return sup, clock
+
+
+def test_dead_node_evicted_on_timeout():
+    sup, clock = _fleet()
+    for step in range(3):
+        clock.t += 1.0
+        for uid in (0, 1, 2):            # worker 3 goes silent
+            sup.heartbeat(uid, step, 1.0)
+        assert sup.check() == [] or clock.t <= 10.0
+    clock.t += 11.0
+    for uid in (0, 1, 2):
+        sup.heartbeat(uid, 3, 1.0)
+    evicted = sup.check()
+    assert evicted == [3]
+    assert sup.alive_workers() == [0, 1, 2]
+    assert sup.generation == 1
+
+
+def test_straggler_evicted_after_patience():
+    sup, clock = _fleet(patience=2)
+    evictions = []
+    for step in range(4):
+        clock.t += 1.0
+        for uid in range(4):
+            t = 5.0 if uid == 2 else 1.0     # worker 2 runs 5x slower
+            sup.heartbeat(uid, step, t)
+        evictions += sup.check()
+    assert evictions == [2]
+    assert 2 not in sup.alive_workers()
+
+
+def test_fast_fleet_not_evicted():
+    sup, clock = _fleet()
+    for step in range(5):
+        clock.t += 1.0
+        for uid in range(4):
+            sup.heartbeat(uid, step, 1.0 + 0.1 * uid)   # mild skew only
+        assert sup.check() == []
+    assert sup.alive_workers() == [0, 1, 2, 3]
+
+
+def test_remesh_plan_after_eviction():
+    sup, clock = _fleet()
+    for step in range(3):
+        clock.t += 1.0
+        for uid in (0, 1, 2):
+            sup.heartbeat(uid, step, 1.0)
+    clock.t += 20.0
+    for uid in (0, 1, 2):
+        sup.heartbeat(uid, 3, 1.0)
+    sup.check()
+    plan = sup.remesh_plan(chips_per_worker=4)
+    assert plan["workers"] == [0, 1, 2]
+    assert plan["n_chips"] == 12
+    assert plan["resume_step"] == 3
+    assert plan["generation"] == 1
+
+
+def test_min_workers_floor():
+    sup, clock = _fleet(n=2)
+    sup.cfg = SupervisorConfig(heartbeat_timeout_s=1.0, min_workers=2)
+    clock.t += 100.0                    # everyone times out...
+    assert sup.check() == []            # ...but the floor holds the fleet
+    assert len(sup.alive_workers()) == 2

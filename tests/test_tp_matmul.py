@@ -1,0 +1,74 @@
+"""Quantized manual-TP matmul block vs the unsharded reference."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(body: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_tp_mlp_matches_reference():
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.tp_matmul import tp_mlp_block
+        mesh = jax.make_mesh((4,), ("model",))
+        rng = np.random.default_rng(0)
+        d, f = 64, 128
+        x = rng.normal(size=(6, d)).astype(np.float32)
+        w_up = (rng.normal(size=(d, f)) / np.sqrt(d)).astype(np.float32)
+        w_down = (rng.normal(size=(f, d)) / np.sqrt(f)).astype(np.float32)
+        got = np.asarray(tp_mlp_block(mesh, jnp.asarray(x),
+                                      jnp.asarray(w_up), jnp.asarray(w_down)),
+                         np.float32)
+        h = np.asarray(jax.nn.gelu(
+            jnp.asarray(x @ w_up, jnp.float32)), np.float32)
+        want = h @ w_down
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        # int8 activation wire + bf16 matmuls: a few percent.
+        assert rel < 0.05, rel
+        print("TP_MLP_OK", rel)
+    """)
+    assert "TP_MLP_OK" in out
+
+
+def test_collectives_are_quantized():
+    """The compiled shard_map block must gather int8 (s8), not f32."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, re
+        from repro.distributed.tp_matmul import tp_mlp_block
+        mesh = jax.make_mesh((4,), ("model",))
+        d, f = 64, 128
+        xs = jax.ShapeDtypeStruct((6, d), jnp.float32)
+        us = jax.ShapeDtypeStruct((d, f), jnp.float32)
+        ds = jax.ShapeDtypeStruct((f, d), jnp.float32)
+        c = jax.jit(lambda x, u, v: tp_mlp_block(mesh, x, u, v)).lower(
+            xs, us, ds).compile()
+        txt = c.as_text()
+        ags = [l for l in txt.splitlines() if "all-gather(" in l]
+        # The activation gather is int8 on the wire (vs f32 under GSPMD —
+        # §Perf J3/L1).  The remaining gathers are the tiny scale vector and
+        # the test-convenience output gather.
+        assert any("s8[6,64]" in l.split("all-gather")[0] for l in ags), ags
+        rs = [l for l in txt.splitlines() if "reduce-scatter(" in l]
+        assert rs, "expected a psum_scatter lowering to reduce-scatter"
+        print("WIRE_OK", len(ags))
+    """)
+    assert "WIRE_OK" in out
+
+
+def test_napkin_math():
+    from repro.distributed.tp_matmul import collective_bytes_per_token
+    est = collective_bytes_per_token(4096, 12288, 16)
+    assert est["vs_f32"] > 3.5          # ~4x vs the CPU-promoted f32 gather
+    assert est["vs_bf16"] > 1.8         # ~2x vs native-bf16 GSPMD
+    assert est["vs_allreduce_f32"] == 4.0

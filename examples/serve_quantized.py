@@ -1,5 +1,9 @@
-"""Batched serving with offline-quantized (plane-decomposed) weights and an
-optional int8 KV cache — the paper's inference path as a service.
+"""Continuous-batching serving with offline-quantized (plane-decomposed)
+weights and an optional int8 KV cache — the paper's inference path as a
+service.  Requests with heterogeneous prompt lengths and decode budgets
+stream through a fixed-slot cache arena: a slot frees the step its budget
+is exhausted and the next request is prefilled into it without touching
+the other slots.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -12,7 +16,7 @@ from repro.configs import reduced_config
 from repro.core.policy import uniform_policy
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
-from repro.serve.engine import Request, ServeEngine, prepare_params
+from repro.serve.engine import Request, ServeEngine
 
 
 def main():
@@ -20,28 +24,30 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    # Offline quantization: weights -> Table-I planes (the "preload").
+    # The engine performs the weight preload itself: float params ->
+    # Table-I planes, prepared once at construction.
     policy = uniform_policy(4, 8, backend="decomposed")
-    prepared, qpaths = prepare_params(params, policy, model)
-    n_q = len(qpaths)
-    print(f"quantized {n_q} projection weights to 4-bit planes")
-
     rt = Runtime(policy=policy, mode="serve", moe_dropless=True)
-    engine = ServeEngine(model, prepared, rt, max_batch=4, max_len=64,
-                         kv_bits=8)   # int8 KV cache
+    engine = ServeEngine(model, params, rt, max_batch=4, max_len=64,
+                         kv_bits=8, decode_chunk=8)   # int8 KV cache
+    print(f"quantized {len(engine.quantized_paths)} projection weights "
+          f"to 4-bit planes")
 
     rng = np.random.default_rng(1)
     requests = [
-        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=6 + i % 3),
-                max_new_tokens=8)
-        for i in range(6)
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
+                max_new_tokens=2 + 3 * (i % 4))
+        for i in range(8)
     ]
     t0 = time.time()
     results = engine.run(requests)
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
+    st = engine.stats
     print(f"served {len(requests)} requests / {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s on CPU interpret)")
+    print(f"decode: {st.decode_steps} jitted steps in {st.decode_chunks} "
+          f"chunk dispatches, {st.decode_slot_steps} active slot-steps")
     for uid in sorted(results):
         print(f"  req {uid}: {results[uid]}")
 

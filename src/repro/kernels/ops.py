@@ -116,15 +116,20 @@ def _pad_to(x, m, axis):
 
 def quantize_activations(x, a_bits: int, *, signed: bool = True,
                          use_pallas: Optional[bool] = None):
-    """Per-row activation quantization.  x: f32 [..., K] -> (int8, scale)."""
+    """Per-row activation quantization.  x: f32 [..., K] -> (int8, scale).
+
+    ``use_pallas=None`` routes to the fused Pallas kernel on TPU and to the
+    plain-jnp oracle elsewhere (bit-identical numerics; off-TPU the kernel
+    only runs interpreted, which is far slower to trace in model code).
+    ``True``/``False`` force the respective path — parity is asserted in
+    tests/test_kernel_parity.py."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return act_quant_pallas(x, a_bits=a_bits, signed=signed)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or not _on_tpu():
-        # Pallas path (interpret off-TPU) kept for kernel parity tests; the
-        # plain-jnp oracle is used in traced model code for compile speed.
-        pass
     q, s = ref.act_quant_ref(x2, bits=a_bits, signed=signed)
     return q.reshape(*lead, k), s.reshape(*lead, 1)
 

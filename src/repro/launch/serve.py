@@ -1,5 +1,7 @@
 """Serving driver: offline-quantize a model (Table-I planes, optionally
-packed) and serve batched greedy-decode requests through the engine.
+packed) and serve a stream of greedy-decode requests through the
+continuous-batching engine (`--baseline` runs the batch-at-a-time
+reference engine for comparison).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --w-bits 4 --kv-bits 8 --requests 8
@@ -16,7 +18,8 @@ from repro.configs import get_config, reduced_config
 from repro.core.policy import uniform_policy
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
-from repro.serve.engine import Request, ServeEngine, prepare_params
+from repro.serve.engine import (BatchServeEngine, Request, ServeEngine,
+                                prepare_params)
 
 
 def main(argv=None):
@@ -33,6 +36,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--baseline", action="store_true",
+                    help="use the batch-at-a-time reference engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -41,6 +47,7 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     policy = uniform_policy(args.w_bits, args.a_bits, backend=args.backend)
     if args.backend != "dense":
+        # Weight preload: planes prepared ONCE, before any request arrives.
         t0 = time.time()
         params, qpaths = prepare_params(params, policy, model,
                                         packed=args.packed)
@@ -48,20 +55,25 @@ def main(argv=None):
               f"(w{args.w_bits}, packed={args.packed}) "
               f"in {time.time()-t0:.1f}s")
     rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced)
-    engine = ServeEngine(model, params, rt, max_batch=args.max_batch,
-                         max_len=args.max_len, kv_bits=args.kv_bits)
+    cls = BatchServeEngine if args.baseline else ServeEngine
+    kw = {} if args.baseline else {"decode_chunk": args.decode_chunk}
+    engine = cls(model, params, rt, max_batch=args.max_batch,
+                 max_len=args.max_len, kv_bits=args.kv_bits, **kw)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=1 + (args.max_new * (i % 4)) // 3)
             for i in range(args.requests)]
     t0 = time.time()
     results = engine.run(reqs)
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
+    st = engine.stats
     print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
+    print(f"stats: prefills={st.prefills} decode_steps={st.decode_steps} "
+          f"slot_steps={st.decode_slot_steps} chunks={st.decode_chunks}")
     return results
 
 

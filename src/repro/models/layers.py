@@ -160,15 +160,19 @@ def flash_attention(q, k, v, *, causal: bool = True, block_k: int = 1024,
 # ------------------------------------------------------------------ KV cache
 @dataclasses.dataclass
 class KVCache:
-    """Pre-allocated KV cache; optionally stored quantized (kv_bits=8) with
-    per-(position, head) scales — the paper's precision scaling applied to
-    the decode memory bottleneck (beyond-paper feature)."""
+    """Pre-allocated KV cache with PER-SLOT lengths; optionally stored
+    quantized (kv_bits=8) with per-(position, head) scales — the paper's
+    precision scaling applied to the decode memory bottleneck.
+
+    The batch axis is a *slot* axis: every slot tracks its own fill point
+    (``length[b]``), so a continuous-batching engine can reset/refill one
+    slot while the others keep decoding against their caches."""
 
     k: jax.Array          # [B, Smax, KVH, Dh]  bf16 or int8
     v: jax.Array
     k_scale: Optional[jax.Array]   # f32 [B, Smax, KVH, 1] when quantized
     v_scale: Optional[jax.Array]
-    length: jax.Array     # int32 scalar — filled positions
+    length: jax.Array     # int32 [B] — filled positions per slot
 
     @property
     def quantized(self) -> bool:
@@ -178,14 +182,15 @@ class KVCache:
     def create(batch: int, max_len: int, kv_heads: int, head_dim: int,
                dtype=jnp.bfloat16, kv_bits: Optional[int] = None) -> "KVCache":
         shape = (batch, max_len, kv_heads, head_dim)
+        lengths = jnp.zeros((batch,), jnp.int32)
         if kv_bits == 8:
             z8 = jnp.zeros(shape, jnp.int8)
             # Scales in bf16: per-(position, head) f32 scales would cost 50%
             # overhead per device once head_dim is TP-sharded (§Perf decode).
             s = jnp.ones((batch, max_len, kv_heads, 1), jnp.bfloat16)
-            return KVCache(z8, z8, s, s, jnp.zeros((), jnp.int32))
+            return KVCache(z8, z8, s, s, lengths)
         z = jnp.zeros(shape, dtype)
-        return KVCache(z, z, None, None, jnp.zeros((), jnp.int32))
+        return KVCache(z, z, None, None, lengths)
 
     def _quant(self, x):
         amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
@@ -193,9 +198,21 @@ class KVCache:
         q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127)
         return q.astype(jnp.int8), scale.astype(self.k_scale.dtype)
 
-    def update(self, k_new, v_new, start) -> "KVCache":
-        """Insert [B, S_new, KVH, Dh] at position `start` (traced ok)."""
+    def _lengths_after(self, start, s, new_length):
+        if new_length is None:
+            return jnp.zeros_like(self.length) + start + s
+        return jnp.broadcast_to(new_length, self.length.shape).astype(
+            self.length.dtype)
+
+    def update(self, k_new, v_new, start, *, new_length=None) -> "KVCache":
+        """Insert [B, S_new, KVH, Dh] at position `start` (scalar, traced ok).
+
+        ``new_length`` ([B] or scalar) overrides the resulting per-slot
+        lengths — used for right-padded prefill, where ``S_new`` is the
+        padded length but only the first ``new_length[b]`` positions of slot
+        ``b`` are real tokens."""
         idx = (0, start, 0, 0)
+        ln = self._lengths_after(start, k_new.shape[1], new_length)
         if self.quantized:
             kq, ks = self._quant(k_new)
             vq, vs = self._quant(v_new)
@@ -204,11 +221,40 @@ class KVCache:
                 jax.lax.dynamic_update_slice(self.v, vq, idx),
                 jax.lax.dynamic_update_slice(self.k_scale, ks, idx),
                 jax.lax.dynamic_update_slice(self.v_scale, vs, idx),
-                start + k_new.shape[1])
+                ln)
         return KVCache(
             jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), idx),
             jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), idx),
-            None, None, start + k_new.shape[1])
+            None, None, ln)
+
+    def append(self, k_new, v_new, active=None) -> "KVCache":
+        """Masked per-slot decode write: one token per slot at that slot's
+        own ``length[b]`` (a scatter, not a slice — slots sit at different
+        positions).  Slots with ``active[b] == False`` are left untouched:
+        neither their K/V rows nor their lengths move, so a finished slot's
+        cache is frozen until the scheduler reuses it."""
+        b = self.k.shape[0]
+        if active is None:
+            active = jnp.ones((b,), bool)
+        active = active & (self.length < self.k.shape[1])   # never overflow
+        idx = jnp.arange(b)
+        pos = jnp.clip(self.length, 0, self.k.shape[1] - 1)
+
+        def put(buf, val):
+            cur = buf[idx, pos]
+            val = jnp.where(active[(...,) + (None,) * (val.ndim - 1)],
+                            val.astype(buf.dtype), cur)
+            return buf.at[idx, pos].set(val)
+
+        ln = self.length + active.astype(self.length.dtype)
+        if self.quantized:
+            kq, ks = self._quant(k_new)
+            vq, vs = self._quant(v_new)
+            return KVCache(put(self.k, kq[:, 0]), put(self.v, vq[:, 0]),
+                           put(self.k_scale, ks[:, 0]),
+                           put(self.v_scale, vs[:, 0]), ln)
+        return KVCache(put(self.k, k_new[:, 0]), put(self.v, v_new[:, 0]),
+                       None, None, ln)
 
     def read(self, dtype=jnp.bfloat16):
         if self.quantized:
@@ -244,7 +290,9 @@ def decode_attention(q, cache: KVCache):
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
                    preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(sk)
-    s = jnp.where((pos < cache.length)[None, None, None, None, :], s, -1e30)
+    # Per-slot length mask: slot b attends only its own filled positions.
+    valid = pos[None, :] < cache.length[:, None]            # [B, Smax]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -269,19 +317,27 @@ def attention_init(key, cfg, dtype=jnp.bfloat16):
 
 def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
                     positions=None, cache: Optional[KVCache] = None,
-                    cache_start=None):
+                    cache_start=None, seq_lengths=None, active=None):
     """GQA attention with RoPE (+ optional qk_norm).  If `cache` is given,
-    runs in incremental mode (appends k/v at cache_start, attends to cache).
-    Returns (out, new_cache)."""
+    runs in incremental mode: S > 1 prefills the cache from position 0
+    (right-padded prompts supported via ``seq_lengths`` [B], the true token
+    counts); S == 1 appends one token at each slot's own fill point, with
+    ``active`` [B] masking writes for finished/empty slots.
+
+    NOTE: unlike the scalar-length seed, a multi-token call on a warm cache
+    does NOT append at the fill point (per-slot lengths have no single
+    append position).  Chunked prefill must pass ``cache_start`` (and gets
+    the uniform-start semantics); otherwise S > 1 means prefill-from-
+    scratch.  Returns (out, new_cache)."""
     b, s, d = x.shape
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     if positions is None:
         if cache_start is not None:
-            base = cache_start
-        elif cache is not None:
-            base = cache.length          # append at the current fill point
+            base = jnp.asarray(cache_start, jnp.int32).reshape(-1, 1)
+        elif cache is not None and s == 1:
+            base = cache.length[:, None]   # append at each slot's fill point
         else:
-            base = 0
+            base = jnp.zeros((1, 1), jnp.int32)    # prefill from scratch
         positions = base + jnp.arange(s)[None, :].astype(jnp.int32)
         positions = jnp.broadcast_to(positions, (b, s))
 
@@ -298,14 +354,17 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
 
     new_cache = None
     if cache is not None:
-        new_cache = cache.update(k, v, cache.length if cache_start is None
-                                 else cache_start)
         if s == 1:
+            new_cache = cache.append(k, v, active=active)
             out = decode_attention(q, new_cache)
         else:
+            start = 0 if cache_start is None else cache_start
+            new_cache = cache.update(k, v, start, new_length=seq_lengths)
             kf, vf = new_cache.read(q.dtype)
-            out = flash_attention(q, kf, vf, causal=True,
-                                  q_offset=new_cache.length - s)
+            # q_offset = start: with right-padding, pad queries past a slot's
+            # true length attend only already-written positions (causal) and
+            # their outputs are discarded by the caller's length gather.
+            out = flash_attention(q, kf, vf, causal=True, q_offset=start)
     else:
         out = flash_attention(q, k, v, causal=True)
     out = out.reshape(b, s, h * dh)

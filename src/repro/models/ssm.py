@@ -123,9 +123,16 @@ jax.tree_util.register_dataclass(
 
 
 def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
-              cache: Optional[SSMCache] = None):
+              cache: Optional[SSMCache] = None, seq_lengths=None,
+              active=None):
     """Mamba2 block.  Full-sequence when cache is None (train/prefill);
     single-token state update when cache is given and S == 1.
+
+    ``seq_lengths`` [B] marks right-padded prefill: positions >= length get
+    dt = 0, so pad tokens contribute nothing to the SSD state, and the conv
+    window is gathered ending at each row's true length (exact vs an
+    unpadded run).  ``active`` [B] masks the decode state/conv update for
+    finished slots (continuous batching).
     Returns (y, new_cache)."""
     b, s, d = x.shape
     di, ns, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
@@ -147,6 +154,8 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
             + params["conv_b"].astype(jnp.float32)
         conv_out = jax.nn.silu(conv_out)[:, None, :].astype(conv_in.dtype)
         new_conv = window[:, 1:].astype(jnp.float32)
+        if active is not None:
+            new_conv = jnp.where(active[:, None, None], new_conv, cache.conv)
     else:
         conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
                                             params["conv_b"])
@@ -154,8 +163,20 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
         new_conv = None
         if cache is not None:
             w = cfg.ssm_conv - 1
-            tail = conv_in[:, -w:] if s >= w else jnp.concatenate(
-                [cache.conv[:, s:].astype(conv_in.dtype), conv_in], axis=1)
+            if seq_lengths is not None:
+                # Window of the last w REAL inputs of each row: gather from a
+                # zero-left-padded copy so rows shorter than w keep their
+                # fresh-cache zero context.
+                padded = jnp.concatenate(
+                    [jnp.zeros((b, w, conv_in.shape[-1]), conv_in.dtype),
+                     conv_in], axis=1)
+                idx = seq_lengths[:, None] + jnp.arange(w)[None, :]   # [B, w]
+                tail = jnp.take_along_axis(padded, idx[:, :, None], axis=1)
+            elif s >= w:
+                tail = conv_in[:, -w:]
+            else:
+                tail = jnp.concatenate(
+                    [cache.conv[:, s:].astype(conv_in.dtype), conv_in], axis=1)
             new_conv = tail.astype(jnp.float32)
 
     xc, bc, cc = jnp.split(conv_out, [di, di + ns], axis=-1)
@@ -163,6 +184,11 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
     a = -jnp.exp(params["A_log"])                           # [H], negative
     dtp = jax.nn.softplus(dt.astype(jnp.float32)
                           + params["dt_bias"][None, None, :])  # [B, S, H] f32
+    if seq_lengths is not None and s > 1:
+        # Pad positions get dt = 0 => log_a = 0 and dtx = 0: they advance
+        # neither the state nor any real token's output (exact masking).
+        real = jnp.arange(s)[None, :] < seq_lengths[:, None]   # [B, S]
+        dtp = jnp.where(real[:, :, None], dtp, 0.0)
 
     if cache is not None and s == 1:
         # O(1) decode: S' = exp(a dt) S + dt B (x)^T ; y = C.S' + D x
@@ -173,6 +199,8 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
         y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), s_new) \
             + params["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
         y = y[:, None]                                      # [B, 1, H, P]
+        if active is not None:
+            s_new = jnp.where(active[:, None, None, None], s_new, cache.state)
         new_cache = SSMCache(new_conv, s_new)
     else:
         y = _ssd_chunked(xh, dtp, a, bc, cc, params["D"], cfg.ssm_chunk)

@@ -75,7 +75,8 @@ class LM:
             logits = layers.linear(params["lm_head"], x, rt, "lm_head")
         return shard(logits, "batch", None, "model")
 
-    def _period_body(self, blk_params, x, rt, caches=None):
+    def _period_body(self, blk_params, x, rt, caches=None, seq_lengths=None,
+                     active=None):
         cfg = self.cfg
         new_caches: Dict[str, Any] = {}
         aux = jnp.zeros((), jnp.float32)
@@ -85,10 +86,12 @@ class LM:
             h = layers.rmsnorm(blk["mixer_norm"], x)
             if mixer == "attn":
                 out, nc = layers.attention_apply(
-                    blk["attn"], h, rt, cfg, f"layers.pos{i}.attn", cache=c)
+                    blk["attn"], h, rt, cfg, f"layers.pos{i}.attn", cache=c,
+                    seq_lengths=seq_lengths, active=active)
             else:
                 out, nc = ssm.ssm_apply(
-                    blk["mamba"], h, rt, cfg, f"layers.pos{i}.mamba", cache=c)
+                    blk["mamba"], h, rt, cfg, f"layers.pos{i}.mamba", cache=c,
+                    seq_lengths=seq_lengths, active=active)
             x = x + out
             if caches is not None:
                 new_caches[f"pos{i}"] = nc
@@ -108,7 +111,8 @@ class LM:
         x = shard(x, "batch", None, "model")
         return x, aux, new_caches
 
-    def _stack(self, params, x, rt, caches=None):
+    def _stack(self, params, x, rt, caches=None, seq_lengths=None,
+               active=None):
         if caches is None:
             def body(carry, pp):
                 xx, aux = carry
@@ -123,7 +127,9 @@ class LM:
         def body(carry, xs):
             xx, aux = carry
             pp, pc = xs
-            xx, a, nc = self._period_body(pp, xx, rt, caches=pc)
+            xx, a, nc = self._period_body(pp, xx, rt, caches=pc,
+                                          seq_lengths=seq_lengths,
+                                          active=active)
             return (xx, aux + a), nc
 
         (x, aux), new_caches = jax.lax.scan(
@@ -153,17 +159,40 @@ class LM:
         return jax.tree.map(
             lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), single)
 
-    def prefill(self, params, rt, caches, tokens=None, embeds=None):
-        """Run the prompt through the stack, filling caches.
-        Returns (last-position logits [B, 1, V], new caches)."""
+    def prefill(self, params, rt, caches, tokens=None, embeds=None,
+                seq_lengths=None):
+        """Run the prompt through the stack, filling caches from position 0.
+
+        ``seq_lengths`` [B] supports right-padded batches: per-slot cache
+        lengths are set to the true token counts, pad positions contribute
+        nothing to any cache state, and the returned logits are gathered at
+        each row's last REAL position.  Without it, the whole row is real
+        and the last position is used (seed behaviour).
+
+        Prefill always (re)fills caches from position 0 — a second prefill
+        call on the same caches overwrites them rather than appending
+        (chunked prefill is not supported through this entrypoint; see
+        ``layers.attention_apply``'s ``cache_start``).
+        Returns (last-real-position logits [B, 1, V], new caches)."""
         x = self._embed(params, tokens, embeds)
         x = shard(x, "batch", None, None)
-        x, _, new_caches = self._stack(params, x, rt, caches=caches)
-        return self._head(params, x[:, -1:], rt), new_caches
+        x, _, new_caches = self._stack(params, x, rt, caches=caches,
+                                       seq_lengths=seq_lengths)
+        if seq_lengths is None:
+            last = x[:, -1:]
+        else:
+            idx = jnp.clip(seq_lengths.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+            last = jnp.take_along_axis(
+                x, idx[:, None, None].astype(jnp.int32), axis=1)
+        return self._head(params, last, rt), new_caches
 
-    def decode_step(self, params, rt, caches, tokens=None, embeds=None):
-        """One-token decode against filled caches.
+    def decode_step(self, params, rt, caches, tokens=None, embeds=None,
+                    active=None):
+        """One-token decode against filled caches.  ``active`` [B] masks all
+        cache writes (KV append / SSM state) for finished or empty slots so
+        a continuous-batching engine can keep them frozen in the batch.
         Returns (logits [B, 1, V], new caches)."""
         x = self._embed(params, tokens, embeds)
-        x, _, new_caches = self._stack(params, x, rt, caches=caches)
+        x, _, new_caches = self._stack(params, x, rt, caches=caches,
+                                       active=active)
         return self._head(params, x, rt), new_caches

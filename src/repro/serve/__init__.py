@@ -1,0 +1,16 @@
+"""Serving stack: slot-based continuous batching with preloaded weight
+planes.
+
+``engine``    — ServeEngine (continuous batching) + BatchServeEngine
+                (batch-at-a-time reference) + prepare_params (weight preload)
+``scheduler`` — host-side FIFO admission over fixed slots
+``slots``     — per-slot cache arena views (reset/refill one slot in place)
+``request``   — the Request dataclass
+"""
+from repro.serve.engine import (BatchServeEngine, EngineStats, Request,
+                                ServeEngine, prepare_params)
+from repro.serve.scheduler import Scheduler, SlotState
+from repro.serve.slots import SlotArena
+
+__all__ = ["BatchServeEngine", "EngineStats", "Request", "ServeEngine",
+           "prepare_params", "Scheduler", "SlotState", "SlotArena"]

@@ -1,9 +1,26 @@
-"""Batched serving engine: slot-based continuous batching with jit'd
-prefill/decode and quantized weights (the paper's inference path).
+"""Slot-based continuous-batching serving engine.
 
-Weights are prepared ONCE into decomposed integer planes
-(``prepare_params``) — the analogue of preloading the array — then every
-matmul in prefill/decode runs the plane-decomposed integer path.
+The paper's dataflow is "serial activation input, parallel weight
+preloaded": decomposed weight planes stay resident while activations stream
+through.  The engine mirrors that end to end:
+
+* **Weight preload** — at construction the float params are converted ONCE
+  into the ``QuantizedWeight`` plane pytree (``prepare_params``); that
+  prepared pytree is the engine's only weight representation.
+* **Persistent decode state** — a fixed-slot cache arena
+  (:mod:`repro.serve.slots`): per-slot KV lengths and SSM states live in one
+  pre-allocated pytree across the whole request stream.
+* **Per-slot admission** — a freed slot is re-prefilled individually
+  (:mod:`repro.serve.scheduler`); occupied slots keep decoding untouched.
+* **On-device decode loop** — the inner loop is ONE jitted multi-step
+  ``jax.lax.scan`` over a chunk of decode steps with an active-slot mask and
+  masked cache writes; the host only admits/retires requests between
+  chunks, so per-token dispatch overhead is off the critical path.
+
+A slot stops consuming decode work the step its budget is exhausted (the
+active mask), unlike batch-at-a-time scheduling where every slot decodes
+until the batch-wide max (see :class:`BatchServeEngine`, kept as the
+reference baseline).
 """
 from __future__ import annotations
 
@@ -18,6 +35,12 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels import ops
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
+from repro.serve import slots as slots_lib
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler
+
+__all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
+           "prepare_params"]
 
 
 def prepare_params(params, policy: PrecisionPolicy, model: LM,
@@ -68,32 +91,238 @@ def _path_to_layer_name(path: str) -> str:
     return ".".join(parts)
 
 
+def _params_prepared(params) -> bool:
+    return any(isinstance(l, ops.QuantizedWeight) for l in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, ops.QuantizedWeight)))
+
+
+def _ensure_prepared(params, rt: Runtime, model: LM, packed: bool):
+    """Weight preload shared by both engines: prepare the plane pytree once
+    at construction unless the caller already did.  Returns (params, paths
+    of QuantizedWeight leaves)."""
+    backend = rt.policy.default.backend
+    if backend in ("decomposed", "pallas") and not _params_prepared(params):
+        return prepare_params(params, rt.policy, model, packed=packed)
+    paths = [jax.tree_util.keystr(kp) for kp, l in
+             jax.tree_util.tree_flatten_with_path(
+                 params, is_leaf=lambda x: isinstance(
+                     x, ops.QuantizedWeight))[0]
+             if isinstance(l, ops.QuantizedWeight)]
+    return params, paths
+
+
 @dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray           # [S] int32
-    max_new_tokens: int = 16
-    out_tokens: Optional[List[int]] = None
+class EngineStats:
+    """Work accounting (the utilization story of the refactor)."""
+
+    prefills: int = 0
+    prefill_tokens: int = 0        # real (unpadded) prompt tokens prefilled
+    decode_steps: int = 0          # jitted model decode steps executed
+    decode_chunks: int = 0         # jitted multi-step calls dispatched
+    decode_slot_steps: int = 0     # sum over steps of active slots (useful)
+    decode_idle_slot_steps: int = 0  # masked-out slot-steps (waste bound)
 
 
 class ServeEngine:
-    """Fixed-slot continuous batching: admit up to `max_batch` requests,
-    prefill the batch, greedy-decode until every slot finishes, refill."""
+    """Continuous batching over ``max_batch`` persistent slots.
+
+    Accepts a request stream (``submit`` any time, or ``run`` a list);
+    freed slots are re-prefilled individually against the shared cache
+    arena while the other slots' caches stay untouched, and the decode
+    inner loop is a single jitted multi-step scan (``decode_chunk`` steps
+    per dispatch) with per-slot active masking."""
 
     def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
-                 max_len: int = 512, kv_bits: Optional[int] = None):
+                 max_len: int = 512, kv_bits: Optional[int] = None,
+                 decode_chunk: int = 8, prompt_bucket: int = 8,
+                 packed: bool = False):
         self.model = model
         self.rt = rt
-        self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.kv_bits = kv_bits
+        self.decode_chunk = max(1, decode_chunk)
+        self.prompt_bucket = max(1, prompt_bucket)
+        # Weight preload: the prepared plane pytree is the engine's ONLY
+        # weight representation (prepared here unless already prepared).
+        self.params, self.quantized_paths = _ensure_prepared(
+            params, rt, model, packed)
+
+        self.arena = slots_lib.SlotArena(model, max_batch, max_len,
+                                         kv_bits=kv_bits)
+        self.scheduler = Scheduler(max_batch)
+        self.stats = EngineStats()
+        self._seen_uids: set = set()
+        # Host-mirrored per-slot decode state.
+        self._tok = np.zeros((max_batch,), np.int32)
+        self._remaining = np.zeros((max_batch,), np.int32)
+
+        def prefill_slot(params, caches, slot, tokens, length):
+            """Admit one request: reset slot, prefill its prompt (right-
+            padded to a bucket), write the batch-1 cache back into the
+            arena.  Retraces only per prompt bucket."""
+            sub = slots_lib.slot_view(caches, slot)
+            sub = jax.tree.map(jnp.zeros_like, sub)     # per-slot reset
+            logits, sub = self.model.prefill(
+                params, self.rt, sub, tokens=tokens,
+                seq_lengths=length.reshape(1))
+            caches = slots_lib.slot_write(caches, sub, slot)
+            tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            return tok, caches
+
+        def decode_chunk_fn(params, caches, tok, remaining, n_steps):
+            """The single jitted inner loop: ``n_steps`` decode steps as one
+            lax.scan with an active mask.  A slot's budget hitting zero
+            freezes its cache (masked writes) THAT step; its lane still
+            flows through the matmuls (dense batch) but produces no state
+            change and no emitted token."""
+            def step(carry, _):
+                tok, caches, remaining = carry
+                active = remaining > 0
+                logits, caches = self.model.decode_step(
+                    params, self.rt, caches, tokens=tok[:, None],
+                    active=active)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                tok = jnp.where(active, nxt, tok)
+                remaining = remaining - active.astype(jnp.int32)
+                return (tok, caches, remaining), (tok, active)
+
+            (tok, caches, remaining), (toks, actives) = jax.lax.scan(
+                step, (tok, caches, remaining), None, length=n_steps)
+            return caches, tok, remaining, toks, actives
+
+        self._prefill_slot = jax.jit(prefill_slot)
+        self._decode_chunk = jax.jit(decode_chunk_fn,
+                                     static_argnames=("n_steps",))
+
+    # ----------------------------------------------------------------- intake
+    def submit(self, request: Request) -> None:
+        plen = len(request.prompt)
+        if plen == 0:
+            raise ValueError(f"request {request.uid}: empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError(f"request {request.uid}: max_new_tokens must be "
+                             f">= 1, got {request.max_new_tokens}")
+        if plen + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({plen}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds max_len {self.max_len}")
+        if request.uid in self._seen_uids:
+            raise ValueError(f"request uid {request.uid} already submitted "
+                             "(results are keyed by uid)")
+        self._seen_uids.add(request.uid)
+        self.scheduler.submit(request)
+
+    def _bucket_pad(self, prompt: np.ndarray):
+        """Right-pad to the next bucket multiple (few jit retraces)."""
+        plen = len(prompt)
+        bucket = -(-plen // self.prompt_bucket) * self.prompt_bucket
+        bucket = min(bucket, self.max_len)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = prompt
+        return padded, plen
+
+    def _admit_free_slots(self) -> None:
+        for slot in self.scheduler.free_slots():
+            req = self.scheduler.admit(slot)
+            if req is None:
+                break
+            padded, plen = self._bucket_pad(np.asarray(req.prompt))
+            tok, self.arena.caches = self._prefill_slot(
+                self.params, self.arena.caches, jnp.int32(slot),
+                jnp.asarray(padded), jnp.int32(plen))
+            self.stats.prefills += 1
+            self.stats.prefill_tokens += plen
+            first = int(tok)
+            state = self.scheduler.slots[slot]
+            state.emit(first)                     # token 1 of max_new
+            self._tok[slot] = first
+            self._remaining[slot] = state.remaining
+
+    # ------------------------------------------------------------------- run
+    def step(self) -> None:
+        """One scheduling round: admit into free slots, then run one jitted
+        decode chunk and account its tokens."""
+        self._admit_free_slots()
+        self.scheduler.release_done()             # max_new_tokens == 1 cases
+        occupied = self.scheduler.occupied()
+        if not occupied:
+            return
+        # Trim the chunk so a tail of all-finished steps is never dispatched
+        # (keyed per distinct length: at most decode_chunk jit entries).
+        n_steps = int(min(self.decode_chunk,
+                          max(s.remaining for _, s in occupied)))
+        (self.arena.caches, tok, remaining, toks, actives) = \
+            self._decode_chunk(self.params, self.arena.caches,
+                               jnp.asarray(self._tok),
+                               jnp.asarray(self._remaining), n_steps=n_steps)
+        self._tok = np.array(tok)            # copies: host arrays stay writable
+        self._remaining = np.array(remaining)
+        toks = np.asarray(toks)                   # [n_steps, B]
+        actives = np.asarray(actives)
+        self.stats.decode_chunks += 1
+        self.stats.decode_steps += n_steps
+        self.stats.decode_slot_steps += int(actives.sum())
+        self.stats.decode_idle_slot_steps += int((~actives).sum())
+        for slot, state in occupied:
+            for s in range(n_steps):
+                if actives[s, slot]:
+                    state.emit(int(toks[s, slot]))
+        self.scheduler.release_done()
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve a request list to completion (streaming entrypoint:
+        ``submit`` + repeated ``step`` + ``results``)."""
+        for r in requests:
+            self.submit(r)
+        while self.scheduler.has_work:
+            self.step()
+        return {uid: self.scheduler.finished[uid]
+                for uid in (r.uid for r in requests)}
+
+    @property
+    def results(self) -> Dict[int, List[int]]:
+        return dict(self.scheduler.finished)
+
+
+class BatchServeEngine:
+    """Reference batch-at-a-time baseline (the seed's scheduling): admit up
+    to ``max_batch`` requests, prefill them together, decode EVERY slot for
+    the batch-wide ``max_new_tokens``, then refill the whole batch.
+
+    Kept for parity tests and benchmarks: its outputs are exact per request
+    (right-padded prefill with per-row true lengths), but finished slots
+    keep burning decode steps until the batch max — the waste the
+    continuous-batching engine eliminates."""
+
+    def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
+                 max_len: int = 512, kv_bits: Optional[int] = None,
+                 packed: bool = False):
+        self.model = model
+        self.rt = rt
+        self.params, _ = _ensure_prepared(params, rt, model, packed)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.kv_bits = kv_bits
+        self.stats = EngineStats()
         self._prefill = jax.jit(
-            lambda p, c, t: model.prefill(p, rt, c, tokens=t))
+            lambda p, c, t, ln: model.prefill(p, rt, c, tokens=t,
+                                              seq_lengths=ln))
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, rt, c, tokens=t))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        for r in requests:   # same admission contract as ServeEngine.submit
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {r.uid}: empty prompt")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.uid}: max_new_tokens must be "
+                                 f">= 1, got {r.max_new_tokens}")
+            if len(r.prompt) + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt ({len(r.prompt)}) + "
+                    f"max_new_tokens ({r.max_new_tokens}) exceeds max_len "
+                    f"{self.max_len}")
         results: Dict[int, List[int]] = {}
         queue = list(requests)
         while queue:
@@ -106,11 +335,16 @@ class ServeEngine:
         b = len(batch)
         plen = max(len(r.prompt) for r in batch)
         prompts = np.zeros((b, plen), np.int32)
+        lengths = np.zeros((b,), np.int32)
         for i, r in enumerate(batch):
-            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            prompts[i, :len(r.prompt)] = r.prompt    # right-pad
+            lengths[i] = len(r.prompt)
         caches = self.model.init_cache(b, self.max_len, kv_bits=self.kv_bits)
         logits, caches = self._prefill(self.params, caches,
-                                       jnp.asarray(prompts))
+                                       jnp.asarray(prompts),
+                                       jnp.asarray(lengths))
+        self.stats.prefills += b
+        self.stats.prefill_tokens += int(lengths.sum())
         max_new = max(r.max_new_tokens for r in batch)
         outs = [[] for _ in range(b)]
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -120,5 +354,7 @@ class ServeEngine:
                     outs[i].append(int(tok[i]))
             logits, caches = self._decode(self.params, caches, tok[:, None])
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            self.stats.decode_steps += 1
+            self.stats.decode_slot_steps += b
         return {r.uid: outs[i][: r.max_new_tokens]
                 for i, r in enumerate(batch)}

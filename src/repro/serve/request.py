@@ -1,0 +1,14 @@
+"""Serving request type (shared by scheduler and engine)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16     # total tokens returned (>= 1; results come
+                                 # from ServeEngine.run / .results)

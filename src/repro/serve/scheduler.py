@@ -1,0 +1,90 @@
+"""Host-side admission scheduler for slot-based continuous batching.
+
+Pure bookkeeping, no JAX: a FIFO waiting queue plus per-slot state (which
+request occupies the slot, tokens emitted so far, decode budget remaining).
+The engine asks for free slots after every decode chunk and admits waiting
+requests into them — occupied slots are never re-prefilled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One occupied decode slot."""
+
+    request: Request
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0     # decode tokens still owed to this request
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    def emit(self, token: int) -> None:
+        self.tokens.append(token)
+        self.remaining -= 1
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+
+class Scheduler:
+    """FIFO admission over a fixed number of slots."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.waiting: Deque[Request] = deque()
+        self.slots: List[Optional[SlotState]] = [None] * num_slots
+        self.finished: Dict[int, List[int]] = {}
+
+    # -------------------------------------------------------------- queueing
+    def submit(self, request: Request) -> None:
+        self.waiting.append(request)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self, slot: int) -> Optional[Request]:
+        """Pop the next waiting request into ``slot``; None if queue empty."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied (uid "
+                             f"{self.slots[slot].uid})")
+        if not self.waiting:
+            return None
+        req = self.waiting.popleft()
+        self.slots[slot] = SlotState(request=req,
+                                     remaining=req.max_new_tokens)
+        return req
+
+    # ------------------------------------------------------------- lifecycle
+    def occupied(self) -> List[Tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def release(self, slot: int) -> SlotState:
+        """Free a finished slot, recording its output tokens."""
+        state = self.slots[slot]
+        if state is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        self.finished[state.uid] = state.tokens
+        return state
+
+    def release_done(self) -> List[int]:
+        """Release every slot whose budget is exhausted; returns slot ids."""
+        freed = []
+        for i, s in self.occupied():
+            if s.done:
+                self.release(i)
+                freed.append(i)
+        return freed
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)

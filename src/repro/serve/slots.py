@@ -1,0 +1,55 @@
+"""Fixed-slot cache arena for continuous batching.
+
+The model's cache pytree (``LM.init_cache``) stacks every leaf as
+``[n_periods, B, ...]``: axis 1 is the slot axis.  This module provides the
+slot-granular views the engine needs — extract one slot as a batch-1 cache,
+write a batch-1 cache back into its slot, reset a slot — all as pure
+functions usable under ``jax.jit`` with a traced slot index, so admitting a
+request into slot ``i`` never touches any other slot's K/V rows, lengths,
+or SSM state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+SLOT_AXIS = 1   # cache leaves are [n_periods, B, ...]
+
+
+def slot_view(caches, slot):
+    """Extract slot ``slot`` as a batch-1 cache pytree (traced-index ok)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS),
+        caches)
+
+
+def slot_write(caches, sub, slot):
+    """Write a batch-1 cache pytree back into slot ``slot``."""
+    def put(a, s):
+        idx = [0] * a.ndim
+        idx[SLOT_AXIS] = slot
+        return jax.lax.dynamic_update_slice(a, s.astype(a.dtype), tuple(idx))
+    return jax.tree.map(put, caches, sub)
+
+
+def slot_reset(caches, slot):
+    """Zero one slot's cache state (lengths included) in place of the pytree."""
+    zero = jax.tree.map(lambda a: jnp.zeros_like(
+        jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS)), caches)
+    return slot_write(caches, zero, slot)
+
+
+class SlotArena:
+    """Owns the arena cache pytree: ``max_slots`` persistent decode slots
+    sharing one pre-allocated KV/SSM cache, each with an independent fill
+    point (per-slot ``KVCache.length``)."""
+
+    def __init__(self, model, max_slots: int, max_len: int,
+                 kv_bits: Optional[int] = None):
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.kv_bits = kv_bits
+        self.caches: Any = model.init_cache(max_slots, max_len,
+                                            kv_bits=kv_bits)

@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim for the property-based test files.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When it
+is missing, the property tests must SKIP instead of breaking collection for
+the whole suite — each file also carries a deterministic non-hypothesis
+fallback case so the contract under test keeps at least one executable
+check.
+
+Usage in a test module::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Replace the test with an argument-free skipping stub (so pytest
+        never tries to resolve the strategy parameters as fixtures)."""
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def _skipped():
+                pass
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(f):
+            return f
+        return deco
+
+    class _NullStrategies:
+        """st.anything(...) -> None; only ever consumed by the stub given."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()

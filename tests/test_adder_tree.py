@@ -1,6 +1,6 @@
 """CSA split-path adder tree functional contract (paper §III-C)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import adder_tree
 
@@ -24,6 +24,18 @@ def test_unsigned_msb_path_quiet(vals):
     assert np.asarray(msb).sum() == 0
     assert float(adder_tree.msb_path_activity(p)) == 0.0
     assert np.array_equal(np.asarray(adder_tree.csa_tree_sum(p)), p.sum())
+
+
+def test_split_tree_equals_sum_deterministic():
+    """Non-hypothesis fallback: seeded sweep of the same contract."""
+    rng = np.random.default_rng(0)
+    for rows in (1, 3, 8):
+        p = rng.integers(-4, 4, size=(rows, 64)).astype(np.int32)
+        got = adder_tree.csa_tree_sum(p, axis=-1)
+        assert np.array_equal(np.asarray(got), p.sum(-1))
+    u = rng.integers(0, 4, size=(16,)).astype(np.int32)
+    msb, _ = adder_tree.split_products(u)
+    assert np.asarray(msb).sum() == 0
 
 
 def test_signed_msb_weight_is_minus_four():

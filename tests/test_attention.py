@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.layers import KVCache, decode_attention, flash_attention
 
@@ -40,6 +40,24 @@ def test_flash_matches_naive(sq, sk_extra, h, g, block_k, seed):
     k = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
     v = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
     q_offset = sk - sq           # q appended at the end (prefill chunking)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
+        block_k=block_k, q_offset=q_offset), np.float32)
+    want = naive_attention(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sq,sk,h,g,block_k", [
+    (1, 8, 2, 1, 3), (5, 5, 4, 2, 2), (9, 16, 4, 2, 8)])
+def test_flash_matches_naive_deterministic(sq, sk, h, g, block_k):
+    """Non-hypothesis fallback: fixed shape sweep of the same oracle."""
+    rng = np.random.default_rng(sq * 100 + sk)
+    kvh = h // g
+    dh = 8
+    q = rng.normal(size=(2, sq, h, dh)).astype(np.float32)
+    k = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
+    v = rng.normal(size=(2, sk, kvh, dh)).astype(np.float32)
+    q_offset = sk - sq
     got = np.asarray(flash_attention(
         jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
         block_k=block_k, q_offset=q_offset), np.float32)

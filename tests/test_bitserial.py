@@ -1,6 +1,7 @@
 """Property tests: Eq. (1) bit-serial MAC semantics (paper §III-B)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bitserial, decompose
 
@@ -19,6 +20,24 @@ def test_eq1_equals_integer_dot(w_bits, a_bits, w_signed, a_signed, seed):
                                   a_signed=a_signed, w_signed=w_signed)
     want = a.astype(np.int64) @ w.astype(np.int64)
     assert np.array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("w_bits", [2, 5, 8])
+@pytest.mark.parametrize("a_bits", [2, 8])
+def test_eq1_equals_integer_dot_deterministic(w_bits, a_bits):
+    """Non-hypothesis fallback: seeded sweep of the Eq. (1) contract."""
+    rng = np.random.default_rng(w_bits * 16 + a_bits)
+    for w_signed in (True, False):
+        for a_signed in (True, False):
+            wlo, whi = decompose.weight_range(w_bits, w_signed)
+            alo, ahi = decompose.weight_range(a_bits, a_signed)
+            w = rng.integers(wlo, whi + 1, size=(9, 5))
+            a = rng.integers(alo, ahi + 1, size=(3, 9))
+            got = bitserial.bitserial_mac(a, w, a_bits, w_bits,
+                                          a_signed=a_signed,
+                                          w_signed=w_signed)
+            assert np.array_equal(np.asarray(got),
+                                  a.astype(np.int64) @ w.astype(np.int64))
 
 
 def test_sign_bit_plane_is_negative():

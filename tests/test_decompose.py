@@ -1,7 +1,7 @@
 """Property tests: Table-I weight decomposition (paper §III-A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import decompose
 
@@ -50,6 +50,21 @@ def test_only_msb_plane_is_3bit():
     for bits, widths in decompose.DECOMP_SCHEDULE.items():
         assert all(w == 2 for w in widths[1:])
         assert widths[0] in (2, 3)
+
+
+@pytest.mark.parametrize("bits", range(2, 9))
+@pytest.mark.parametrize("signed", [True, False])
+def test_roundtrip_deterministic(bits, signed):
+    """Non-hypothesis fallback: exhaustive roundtrip over the full range."""
+    lo, hi = decompose.weight_range(bits, signed)
+    w = np.arange(lo, hi + 1, dtype=np.int32)
+    planes = decompose.decompose_weights(w, bits, signed=signed)
+    back = decompose.recompose_weights(planes, bits, signed=signed)
+    assert np.array_equal(np.asarray(back), w)
+    for c in range(planes.shape[0]):
+        plo, phi = decompose.plane_value_range(bits, c, signed)
+        pc = np.asarray(planes[c])
+        assert pc.min() >= plo and pc.max() <= phi
 
 
 @given(bits=BITS)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import quant
 
@@ -20,6 +20,20 @@ def test_roundtrip_error_bound(bits, signed, seed):
     q, s = quant.quantize(jnp.asarray(x), cfg)
     back = np.asarray(quant.dequantize(q, s))
     # Max error bounded by half an LSB of the symmetric quantizer.
+    assert np.abs(back - x).max() <= float(s) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("signed", [True, False])
+def test_roundtrip_error_bound_deterministic(bits, signed):
+    """Non-hypothesis fallback: seeded instance of the half-LSB bound."""
+    rng = np.random.default_rng(bits + 10 * signed)
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    cfg = quant.QuantConfig(bits=bits, signed=signed, per_channel=False)
+    q, s = quant.quantize(jnp.asarray(x), cfg)
+    back = np.asarray(quant.dequantize(q, s))
     assert np.abs(back - x).max() <= float(s) * 0.5 + 1e-6
 
 

@@ -222,6 +222,72 @@ def bench_continuous_batching():
          f"token_identical={identical}")
 
 
+def bench_serve_precision_tiers():
+    """Runtime-reconfigurable precision serving: ONE engine, one preloaded
+    8-bit superplane store, requests decoding at 8/8, 4/4 and 2/2.
+
+    Asserts zero prepare_params calls after construction and per-tier
+    token-identity with natively-prepared fixed-precision engines; reports
+    tokens/s and decode steps per tier plus the hwmodel's effective TOPS
+    (the plane-prefix pass-count law: work scales with the EFFECTIVE bits,
+    not the stored ones)."""
+    from repro.configs import reduced_config
+    from repro.core.policy import uniform_policy, uniform_schedule
+    from repro.hwmodel import energy
+    from repro.models.layers import Runtime
+    from repro.models.transformer import LM
+    from repro.serve import engine as engine_mod
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    rng = np.random.default_rng(11)
+    params = model.init(jax.random.PRNGKey(0))
+    tiers = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+    sched = uniform_schedule(tiers, backend="decomposed")
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    names = list(tiers)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=3 + i % 5),
+                    max_new_tokens=(3, 6, 4)[i % 3], tier=names[i % 3])
+            for i in range(9)]
+
+    eng = ServeEngine(model, params, rt, max_batch=3, max_len=64,
+                      decode_chunk=4)
+    preps_after_construction = engine_mod.PREPARE_CALLS
+    t0 = time.perf_counter()
+    got = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    assert engine_mod.PREPARE_CALLS == preps_after_construction, \
+        "weights were re-prepared after construction"
+
+    # Per-tier parity vs engines prepared natively at that precision.
+    for tier, (w, a) in tiers.items():
+        sub = [r for r in reqs if r.tier == tier]
+        native = ServeEngine(
+            model, params,
+            Runtime(policy=uniform_policy(w, a, backend="decomposed"),
+                    mode="serve", moe_dropless=True),
+            max_batch=3, max_len=64, decode_chunk=4)
+        want = native.run([Request(uid=r.uid, prompt=r.prompt,
+                                   max_new_tokens=r.max_new_tokens)
+                           for r in sub])
+        assert all(got[r.uid] == want[r.uid] for r in sub), tier
+
+    toks = sum(len(v) for v in got.values())
+    eff = {t: energy.tier_cost(w, a)["effective_tops"]
+           for t, (w, a) in tiers.items()}
+    steps = eng.stats.decode_steps_by_tier
+    _row("serve_precision_tiers", dt * 1e6 / max(len(reqs), 1),
+         f"tokens/s={toks/dt:.1f} preps_after_construction=0 "
+         f"tier_switches={eng.stats.tier_switches} "
+         "decode_steps={" + " ".join(f"{t}:{steps.get(t, 0)}"
+                                     for t in tiers) + "} "
+         "eff_TOPS={" + " ".join(f"{t}:{v:.2f}" for t, v in eff.items())
+         + "} token_identical_vs_native=True")
+
+
 def bench_dryrun_roofline_summary():
     """Summarize the multi-pod dry-run roofline table if results exist."""
     res_dir = os.path.join(os.path.dirname(os.path.dirname(
@@ -243,20 +309,34 @@ def bench_dryrun_roofline_summary():
          f"skipped={len(cells)-len(live)} dominant={doms}")
 
 
-def main() -> None:
+BENCHES = {
+    "table2_csa_vs_bat": bench_table2_csa_vs_bat,
+    "table3_comparison": bench_table3_comparison,
+    "fig7_breakdown": bench_fig7_breakdown,
+    "fig8_energy_efficiency": bench_fig8_energy_efficiency,
+    "mobilenetv2_power": bench_mobilenetv2_power,
+    "mobilenetv2_throughput": bench_mobilenetv2_throughput,
+    "kernel_bitserial_matmul": bench_kernel_bitserial_matmul,
+    "kernel_packed_planes": bench_kernel_packed_vs_unpacked,
+    "kernel_act_quant": bench_act_quant,
+    "pe_array_utilization": bench_pe_array_utilization,
+    "serve_continuous_batching": bench_continuous_batching,
+    "serve_precision_tiers": bench_serve_precision_tiers,
+    "dryrun_roofline": bench_dryrun_roofline_summary,
+}
+
+
+def main(argv=None) -> None:
+    """Run all rows, or a subset: ``run.py --only name [name ...]``."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="+", choices=sorted(BENCHES),
+                    help="run only these rows (CI smoke)")
+    args = ap.parse_args(argv)
+    names = args.only or list(BENCHES)
     print("name,us_per_call,derived")
-    bench_table2_csa_vs_bat()
-    bench_table3_comparison()
-    bench_fig7_breakdown()
-    bench_fig8_energy_efficiency()
-    bench_mobilenetv2_power()
-    bench_mobilenetv2_throughput()
-    bench_kernel_bitserial_matmul()
-    bench_kernel_packed_vs_unpacked()
-    bench_act_quant()
-    bench_pe_array_utilization()
-    bench_continuous_batching()
-    bench_dryrun_roofline_summary()
+    for name in names:
+        BENCHES[name]()
 
 
 if __name__ == "__main__":

@@ -3,21 +3,32 @@ efficient weight combination (Table-I decomposition, bit-serial MAC, CSA tree,
 PE-array functional model, mixed-precision policy)."""
 from repro.core.decompose import (  # noqa: F401
     DECOMP_SCHEDULE,
+    RUNTIME_W_BITS,
+    SUPERPLANE_BITS,
     SUPPORTED_BITS,
+    decompose_superplanes,
     decompose_weights,
     decomposed_matmul,
     num_planes,
+    num_prefix_planes,
     plane_shifts,
+    prefix_shifts,
+    recompose_superplane_prefix,
     recompose_weights,
+    superplane_prefix,
     weight_range,
 )
 from repro.core.quant import (  # noqa: F401
+    MAX_BITS,
     QuantConfig,
     compute_scale,
     dequantize,
     fake_quant,
     int_matmul_dequant,
+    nested_quantize,
+    nested_scale,
     quantize,
+    truncate_qint,
 )
 from repro.core.bitserial import activation_bitplanes, bitserial_mac  # noqa: F401
 from repro.core.adder_tree import csa_tree_sum, msb_path_activity  # noqa: F401
@@ -32,6 +43,8 @@ from repro.core.policy import (  # noqa: F401
     BACKENDS,
     LayerPrecision,
     PrecisionPolicy,
+    PrecisionSchedule,
     allocate_bits_by_sensitivity,
     uniform_policy,
+    uniform_schedule,
 )

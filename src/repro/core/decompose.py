@@ -129,6 +129,54 @@ def planes_count(w_planes) -> int:
     return w_planes.shape[0]
 
 
+# ------------------------------------------------------------- superplanes
+# The runtime-reconfigurable store: every weight decomposed ONCE at
+# SUPERPLANE_BITS, planes kept MSB-first so that the first P' planes are
+# exactly the Table-I decomposition of the LSB-truncated (nested) weight:
+#
+#     recompose(planes[:P']) == q8 >> (2 * (4 - P'))        (arithmetic shift)
+#
+# Truncation therefore only ever touches even widths (each plane carries two
+# bits); odd widths remain a *prepare-time* choice, not a runtime one.
+
+SUPERPLANE_BITS = 8
+SUPERPLANE_PLANES = 4
+RUNTIME_W_BITS = (2, 4, 6, 8)   # widths reachable by plane-prefix truncation
+
+
+def decompose_superplanes(q8, *, signed: bool = True):
+    """Decompose an 8-bit integer weight into four MSB-FIRST 2-bit planes.
+
+    ``planes[0]`` is the sign-carrying MSB chunk (signed iff ``signed``);
+    planes 1..3 are unsigned values in [0, 3].  int8 [4, *q8.shape]."""
+    return decompose_weights(q8, SUPERPLANE_BITS, signed=signed)[::-1]
+
+
+def num_prefix_planes(eff_bits: int) -> int:
+    """Plane-prefix length serving an effective weight width."""
+    if eff_bits not in RUNTIME_W_BITS:
+        raise ValueError(
+            f"runtime-truncatable widths are {RUNTIME_W_BITS}, got {eff_bits}")
+    return eff_bits // 2
+
+
+def prefix_shifts(num_planes: int) -> tuple[int, ...]:
+    """Arithmetic left-shift per MSB-first plane: plane i weighs 4^(P'-1-i)."""
+    return tuple(2 * (num_planes - 1 - c) for c in range(num_planes))
+
+
+def superplane_prefix(planes_msb, eff_bits: int):
+    """The MSB plane prefix serving ``eff_bits`` (still MSB-first)."""
+    return planes_msb[: num_prefix_planes(eff_bits)]
+
+
+def recompose_superplane_prefix(planes_msb, eff_bits: int, *,
+                                signed: bool = True):
+    """Integer value of a truncated superplane == ``q8 >> (8 - eff_bits)``."""
+    prefix = superplane_prefix(planes_msb, eff_bits)
+    return recompose_weights(prefix[::-1], eff_bits, signed=signed)
+
+
 def decomposed_matmul(x_int, w_planes, w_bits: int):
     """``x_int @ recompose(w_planes)`` computed the paper's way: one integer
     matmul per plane, partial sums combined with shifts (the TPU analogue of

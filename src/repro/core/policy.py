@@ -78,6 +78,109 @@ def uniform_policy(w_bits: int, a_bits: int, backend: str = "fake_quant",
         w_bits=w_bits, a_bits=a_bits, backend=backend, a_signed=a_signed))
 
 
+# --------------------------------------------------------- runtime schedules
+# Runtime-reconfigurable serving: ONE superplane weight store (prepared at 8
+# bits), many named quality tiers selectable per request at decode time.
+# A PrecisionSchedule replaces the per-prepare PrecisionPolicy for tiered
+# engines: it maps (layer name x tier name) -> effective LayerPrecision, and
+# every tier's w_bits must be reachable by plane-prefix truncation
+# (decompose.RUNTIME_W_BITS) so switching tiers never re-prepares a weight.
+
+from repro.core.decompose import RUNTIME_W_BITS  # noqa: E402
+
+
+@dataclasses.dataclass
+class PrecisionSchedule:
+    """Named runtime tiers over one preloaded superplane weight store.
+
+    ``tiers`` maps tier name -> that tier's default LayerPrecision; ``rules``
+    optionally refines single tiers per layer-name glob (first match wins,
+    same contract as PrecisionPolicy).  All precisions must share
+    ``w_signed`` (signedness is baked into the stored MSB plane) and use an
+    integer serving backend with an even, truncatable ``w_bits``."""
+
+    tiers: Dict[str, LayerPrecision]
+    rules: Dict[str, Dict[str, LayerPrecision]] = dataclasses.field(
+        default_factory=dict)
+    default_tier: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.tiers:
+            raise ValueError("a PrecisionSchedule needs at least one tier")
+        if self.default_tier is None:
+            self.default_tier = next(iter(self.tiers))
+        if self.default_tier not in self.tiers:
+            raise ValueError(f"default tier {self.default_tier!r} not in "
+                             f"{sorted(self.tiers)}")
+        for t in self.rules:
+            if t not in self.tiers:
+                raise ValueError(f"rules for unknown tier {t!r}")
+        signs = set()
+        for prec in self._all_precisions():
+            if prec.backend not in ("decomposed", "pallas"):
+                raise ValueError(
+                    f"tier backend must be an integer serving backend, got "
+                    f"{prec.backend!r}")
+            if prec.w_bits not in RUNTIME_W_BITS:
+                raise ValueError(
+                    f"tier w_bits must be plane-truncatable {RUNTIME_W_BITS},"
+                    f" got {prec.w_bits}")
+            signs.add(prec.w_signed)
+        if len(signs) > 1:
+            raise ValueError("all tiers must share w_signed: the sign mode "
+                             "is baked into the preloaded MSB plane")
+
+    def _all_precisions(self):
+        for prec in self.tiers.values():
+            yield prec
+        for by_layer in self.rules.values():
+            yield from by_layer.values()
+
+    @property
+    def tier_names(self):
+        return tuple(self.tiers)
+
+    @property
+    def w_signed(self) -> bool:
+        return next(iter(self.tiers.values())).w_signed
+
+    def lookup(self, name: str, tier: Optional[str] = None) -> LayerPrecision:
+        tier = self.default_tier if tier is None else tier
+        if tier not in self.tiers:
+            raise KeyError(f"unknown tier {tier!r}; have {sorted(self.tiers)}")
+        for pattern, prec in self.rules.get(tier, {}).items():
+            if fnmatch.fnmatch(name, pattern):
+                return prec
+        return self.tiers[tier]
+
+    def policy_for(self, tier: Optional[str] = None) -> PrecisionPolicy:
+        """Materialize one tier as a plain PrecisionPolicy — what a
+        fixed-precision engine prepared natively at that tier uses (the
+        bit-exact reference for the runtime-truncated path)."""
+        tier = self.default_tier if tier is None else tier
+        if tier not in self.tiers:
+            raise KeyError(f"unknown tier {tier!r}; have {sorted(self.tiers)}")
+        return PrecisionPolicy(rules=dict(self.rules.get(tier, {})),
+                               default=self.tiers[tier])
+
+    def prepare_policy(self) -> PrecisionPolicy:
+        """The max-precision policy the superplane store is prepared under
+        (8-bit; per-layer signedness from the schedule)."""
+        default = next(iter(self.tiers.values()))
+        return PrecisionPolicy(default=dataclasses.replace(
+            default, w_bits=8, a_bits=8))
+
+
+def uniform_schedule(tiers: Dict[str, tuple],
+                     backend: str = "decomposed",
+                     a_signed: bool = True) -> PrecisionSchedule:
+    """Schedule from ``{name: (w_bits, a_bits)}`` pairs, uniform per tier."""
+    return PrecisionSchedule(tiers={
+        name: LayerPrecision(w_bits=w, a_bits=a, backend=backend,
+                             a_signed=a_signed)
+        for name, (w, a) in tiers.items()})
+
+
 def allocate_bits_by_sensitivity(sensitivities: Dict[str, float],
                                  param_counts: Dict[str, int],
                                  avg_bits: float,

@@ -99,6 +99,47 @@ def fake_quant(x, cfg: QuantConfig, scale=None):
     return q * scale
 
 
+MAX_BITS = 8   # the superplane store always quantizes weights at this width
+
+
+def nested_scale(scale, from_bits: int, to_bits: int):
+    """Effective scale after truncating ``from_bits - to_bits`` LSBs.
+
+    Exact in f32: the multiplier is a power of two."""
+    return scale * float(1 << (from_bits - to_bits))
+
+
+def truncate_qint(q, from_bits: int, to_bits: int):
+    """Drop the LSBs of an integer code: ``q >> (from_bits - to_bits)``.
+
+    This is the *nested* (progressive) refinement relation: the ``to_bits``
+    code is an exact bit-prefix of the ``from_bits`` code, so it is what a
+    preloaded superplane array computes when only the MSB planes are read.
+    The shift is arithmetic for signed codes (int dtypes) and logical for
+    unsigned (the uint8 storage is widened first), i.e. floor rounding —
+    the truncated code is biased low by up to one effective LSB, unlike a
+    fresh round-to-nearest quantization (documented tradeoff of
+    runtime-reconfigurable precision)."""
+    shift = from_bits - to_bits
+    if shift < 0:
+        raise ValueError(f"cannot truncate {from_bits}b up to {to_bits}b")
+    return jnp.asarray(q).astype(jnp.int32) >> shift
+
+
+def nested_quantize(x, cfg: QuantConfig, scale=None):
+    """float -> int at ``cfg.bits`` via the nested scheme: round-to-nearest
+    once at MAX_BITS, then truncate LSBs.  Returns (q, effective scale).
+
+    Guarantees ``nested_quantize(x, bits=b)`` == LSB-truncation of
+    ``nested_quantize(x, bits=MAX_BITS)`` for every b <= MAX_BITS — the
+    invariant the runtime plane-prefix serving path relies on."""
+    base = dataclasses.replace(cfg, bits=MAX_BITS)
+    q8, s8 = quantize(x, base, scale=scale)
+    q = truncate_qint(q8, MAX_BITS, cfg.bits)
+    dtype = jnp.int8 if cfg.signed else jnp.uint8
+    return q.astype(dtype), nested_scale(s8, MAX_BITS, cfg.bits)
+
+
 def quantize_unsigned_activations(x, bits: int):
     """Post-ReLU activations: unsigned quantization (S=0 column signal)."""
     cfg = QuantConfig(bits=bits, signed=False, per_channel=False)

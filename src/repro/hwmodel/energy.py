@@ -116,6 +116,38 @@ def table3_ours() -> Dict[str, object]:
     }
 
 
+# ------------------------------------------------------- runtime tier costs
+def tier_cost(w_bits: int, a_bits: int, *, freq_mhz: float = CAL_FREQ_MHZ,
+              toggle: float = CAL_TOGGLE) -> Dict[str, float]:
+    """Cycle/energy cost of serving at an EFFECTIVE precision.
+
+    Runtime plane-prefix truncation means a request's tier — not the stored
+    8-bit superplane — sets the work: the array runs ``w_bits/2`` plane
+    passes (MXU passes on the TPU analogue) at an activation bit-serial
+    depth of ``a_bits`` cycles.  These are the per-tier numbers the
+    ``serve_precision_tiers`` benchmark reports."""
+    from repro.core import decompose
+    cfg = dataclasses.replace(_CFG, clk_mhz=freq_mhz)
+    n_logical, _ = pe_array.logical_columns_per_pass(cfg, w_bits)
+    macs_per_cycle = cfg.rows * n_logical / a_bits
+    return {
+        "plane_passes": float(decompose.num_planes(w_bits)),
+        "bitserial_depth": float(a_bits),
+        "cycles_per_mac": 1.0 / macs_per_cycle,
+        "effective_tops": tops(w_bits, a_bits, freq_mhz=freq_mhz),
+        "tops_per_w": pe_efficiency(w_bits, a_bits, toggle=toggle,
+                                    freq_mhz=freq_mhz),
+        "energy_per_mac_j": energy_per_mac_j(w_bits, a_bits, toggle=toggle,
+                                             freq_mhz=freq_mhz),
+    }
+
+
+def precision_tier_table(tiers: Dict[str, Tuple[int, int]],
+                         **kw) -> Dict[str, Dict[str, float]]:
+    """Per-tier cost table for ``{tier_name: (w_bits, a_bits)}``."""
+    return {name: tier_cost(w, a, **kw) for name, (w, a) in tiers.items()}
+
+
 # Published comparison rows (Table III), scaled-to-28nm values as printed.
 TABLE3_OTHERS = {
     "TVLSI22_bitparallel": {"peak_tops": 4.12, "eff_8bit": 3.62,

@@ -53,19 +53,28 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("w_bits", "bm", "bn", "bk", "interpret"))
-def bitserial_matmul(x, w_planes, *, w_bits: int,
+    jax.jit, static_argnames=("w_bits", "msb_first", "bm", "bn", "bk",
+                              "interpret"))
+def bitserial_matmul(x, w_planes, *, w_bits: int, msb_first: bool = False,
                      bm: int = 128, bn: int = 128, bk: int = 128,
                      interpret: bool = False):
-    """int32 [M, N] = sum_c (x int8 [M, K] @ w_planes[c] int8 [K, N]) << 2c.
+    """int32 [M, N] = sum_c (x int8 [M, K] @ w_planes[c] int8 [K, N]) << s_c.
 
-    Shapes must tile evenly by (bm, bk, bn); the ops.py wrapper pads.
+    ``msb_first=False`` (prepared fixed-precision planes): s_c = 2c.
+    ``msb_first=True`` (a superplane prefix, runtime-truncated): the caller
+    passes the first P' planes of the MSB-first store and the shift table
+    flips to s_c = 2(P'-1-c) — the same MXU passes serve any effective
+    width with no repacking.  Shapes must tile evenly by (bm, bk, bn); the
+    ops.py wrapper pads.
     """
     m, k = x.shape
     p, k2, n = w_planes.shape
     assert k == k2, (k, k2)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    shifts = tuple(2 * c for c in range(p))   # always 2c per plane
+    if msb_first:
+        shifts = decompose.prefix_shifts(p)
+    else:
+        shifts = tuple(2 * c for c in range(p))   # LSB-first: 2c per plane
     nk = k // bk
 
     grid = (m // bm, n // bn, nk)
@@ -83,13 +92,17 @@ def bitserial_matmul(x, w_planes, *, w_bits: int,
     )(x, w_planes)
 
 
-def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk, signed):
+def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, base, nk, signed):
     """Packed variant: weight planes packed 4-per-byte (2-bit fields) in one
     uint8 word per 4 planes; unpacked to int8 in VMEM before the MXU pass.
 
     Beyond-paper optimization: HBM weight traffic scales with w_bits/8 instead
     of P bytes — the decomposition happens at load, exactly where the paper
-    does it (weight preload into the array)."""
+    does it (weight preload into the array).
+
+    ``base`` > 0 is the runtime-truncation offset: only the fields at bit
+    positions >= base (the MSB planes) are read, so one preloaded byte
+    serves every even effective width — fewer MXU passes, zero repacking."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -100,7 +113,7 @@ def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk, signed):
     acc = acc_ref[...]
     nplanes = len(shifts)
     for c, s in enumerate(shifts):
-        field = (packed >> (2 * c)) & 0x3  # uint8 in [0, 3]
+        field = (packed >> (base + 2 * c)) & 0x3  # uint8 in [0, 3]
         if signed and c == nplanes - 1:
             # MSB plane: reinterpret 2-bit field as signed [-2, 1].
             plane = jnp.where(field >= 2, field.astype(jnp.int8) - 4,
@@ -121,26 +134,35 @@ def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk, signed):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("w_bits", "signed", "bm", "bn", "bk", "interpret"))
-def packed_bitserial_matmul(x, w_packed, *, w_bits: int, signed: bool = True,
+    jax.jit, static_argnames=("w_bits", "eff_bits", "signed", "bm", "bn",
+                              "bk", "interpret"))
+def packed_bitserial_matmul(x, w_packed, *, w_bits: int,
+                            eff_bits: int | None = None, signed: bool = True,
                             bm: int = 128, bn: int = 128, bk: int = 128,
                             interpret: bool = False):
     """Packed-plane GEMM: w_packed uint8 [K, N] holds all 2-bit planes of a
     2/4/6/8-bit weight in one byte (plane c at bit position 2c).
 
-    Only even w_bits (pure 2-bit-mode schedules) pack this way; 3/5/7-bit use
-    the unpacked kernel.  Returns int32 [M, N]."""
+    ``eff_bits`` (default: w_bits) runtime-truncates a wider packed store —
+    only the top ``eff_bits/2`` fields are extracted and the shift table is
+    rebased, so a single preloaded byte per weight serves any even effective
+    width <= w_bits.  Only even w_bits (pure 2-bit-mode schedules) pack this
+    way; 3/5/7-bit use the unpacked kernel.  Returns int32 [M, N]."""
     assert w_bits in (2, 4, 6, 8), "packed layout covers 2-bit-mode schedules"
+    eff_bits = w_bits if eff_bits is None else eff_bits
+    assert eff_bits in (2, 4, 6, 8) and eff_bits <= w_bits, (eff_bits, w_bits)
     m, k = x.shape
     k2, n = w_packed.shape
     assert k == k2
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    shifts = decompose.plane_shifts(w_bits, signed)
+    shifts = decompose.plane_shifts(eff_bits, signed)
+    base = w_bits - eff_bits           # LSB fields below this are dropped
     nk = k // bk
 
     grid = (m // bm, n // bn, nk)
     return pl.pallas_call(
-        functools.partial(_packed_kernel, shifts=shifts, nk=nk, signed=signed),
+        functools.partial(_packed_kernel, shifts=shifts, base=base, nk=nk,
+                          signed=signed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

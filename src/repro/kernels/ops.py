@@ -39,13 +39,20 @@ class QuantizedWeight:
     Either unpacked planes (int8 [P, K, N]; paper-faithful "one column per
     plane") or the packed layout (uint8 [K, N], all 2-bit planes of one
     weight in one byte — w_bits/8 bytes at rest, the Fig-3 preload done at
-    load time; even w_bits only)."""
+    load time; even w_bits only).
+
+    ``msb_first=True`` marks a *superplane* store: the weight was quantized
+    once at ``w_bits`` (= quant.MAX_BITS) and the planes are ordered MSB
+    first, so any even effective width ``b <= w_bits`` is served at runtime
+    by the first ``b/2`` planes with ``eff_scale(b)`` — no re-quantization,
+    no repacking (``prepare_superplane``)."""
 
     planes: Optional[jax.Array]        # int8 [P, K, N] (or None if packed)
     scale: jax.Array                   # f32 [1, N] (per-channel) or scalar
     w_bits: int
     signed: bool = True
     packed: Optional[jax.Array] = None  # uint8 [K, N]
+    msb_first: bool = False             # superplane store (see above)
 
     @property
     def kn(self):
@@ -54,22 +61,41 @@ class QuantizedWeight:
         return self.packed.shape[0], self.packed.shape[1]
 
     def get_planes(self):
+        """Planes in this artifact's declared order (MSB-first iff
+        ``msb_first``); unpacks the byte layout on demand."""
         if self.planes is not None:
             return self.planes
-        return unpack_planes(self.packed, self.w_bits, self.signed)
+        planes = unpack_planes(self.packed, self.w_bits, self.signed)
+        return planes[::-1] if self.msb_first else planes
+
+    def eff_scale(self, eff_bits: int):
+        """Per-channel scale of the ``eff_bits``-truncated weight."""
+        return quant.nested_scale(self.scale, self.w_bits, eff_bits)
 
 
 jax.tree_util.register_dataclass(
     QuantizedWeight, data_fields=["planes", "scale", "packed"],
-    meta_fields=["w_bits", "signed"])
+    meta_fields=["w_bits", "signed", "msb_first"])
 
 
 def prepare_weight(w, prec: LayerPrecision,
                    packed: bool = False) -> QuantizedWeight:
-    """Quantize (per-channel symmetric) + Table-I decompose a float weight."""
+    """Quantize (per-channel symmetric) + Table-I decompose a float weight
+    at a fixed precision.
+
+    Even widths quantize *nested*: the integer code is the LSB-truncation
+    of the 8-bit code (``quant.nested_quantize``), so a weight prepared
+    natively at any even width is bit-identical to the runtime plane-prefix
+    truncation of the superplane store — the property that makes
+    fixed-precision engines exact references for runtime tiers.  Odd widths
+    (3/5/7) are never plane-prefix-truncatable, so they keep
+    round-to-nearest and don't pay the nested scheme's floor bias."""
     cfg = quant.QuantConfig(bits=prec.w_bits, signed=prec.w_signed,
                             per_channel=True, channel_axis=-1)
-    q, scale = quant.quantize(w, cfg)
+    if prec.w_bits % 2 == 0:
+        q, scale = quant.nested_quantize(w, cfg)
+    else:
+        q, scale = quant.quantize(w, cfg)
     planes = decompose.decompose_weights(q, prec.w_bits, signed=prec.w_signed)
     if packed and prec.w_bits in (2, 4, 6, 8):
         return QuantizedWeight(planes=None, scale=scale, w_bits=prec.w_bits,
@@ -77,6 +103,50 @@ def prepare_weight(w, prec: LayerPrecision,
                                packed=pack_planes(planes, prec.w_bits))
     return QuantizedWeight(planes=planes, scale=scale, w_bits=prec.w_bits,
                            signed=prec.w_signed)
+
+
+def prepare_superplane(w, *, signed: bool = True,
+                       packed: bool = False) -> QuantizedWeight:
+    """Quantize + decompose ONCE at 8 bits into the MSB-first superplane
+    store — the single preloaded artifact that serves every even runtime
+    width (the paper's preload-once / serve-any-precision dataflow)."""
+    cfg = quant.QuantConfig(bits=quant.MAX_BITS, signed=signed,
+                            per_channel=True, channel_axis=-1)
+    q8, scale = quant.quantize(w, cfg)
+    planes_msb = decompose.decompose_superplanes(q8, signed=signed)
+    if packed:
+        # The byte layout is plane-position-indexed (field c at bits 2c), so
+        # it is order-agnostic: pack from the LSB-first view.
+        return QuantizedWeight(
+            planes=None, scale=scale, w_bits=quant.MAX_BITS, signed=signed,
+            packed=pack_planes(planes_msb[::-1], quant.MAX_BITS),
+            msb_first=True)
+    return QuantizedWeight(planes=planes_msb, scale=scale,
+                           w_bits=quant.MAX_BITS, signed=signed,
+                           msb_first=True)
+
+
+def truncate_weight(qw: QuantizedWeight, eff_bits: int) -> QuantizedWeight:
+    """Materialize a fixed-precision artifact from a superplane store.
+
+    Equivalent to ``prepare_weight`` at ``eff_bits`` (bit-exact, asserted in
+    tests/test_precision_tiers.py) but touches only the stored planes —
+    useful for exporting one tier without the float weights."""
+    if not qw.msb_first:
+        raise ValueError("truncate_weight needs a superplane (msb_first) store")
+    n = decompose.num_prefix_planes(eff_bits)
+    scale = qw.eff_scale(eff_bits)
+    if qw.packed is not None:
+        planes_msb = unpack_planes(qw.packed, qw.w_bits, qw.signed)[::-1][:n]
+    else:
+        planes_msb = qw.planes[:n]
+    planes = planes_msb[::-1]
+    if qw.packed is not None:
+        return QuantizedWeight(planes=None, scale=scale, w_bits=eff_bits,
+                               signed=qw.signed,
+                               packed=pack_planes(planes, eff_bits))
+    return QuantizedWeight(planes=planes, scale=scale, w_bits=eff_bits,
+                           signed=qw.signed)
 
 
 def pack_planes(planes, w_bits: int):
@@ -149,10 +219,21 @@ def act_quant_pallas(x, *, a_bits: int = 8, signed: bool = True,
 
 
 def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
+                            eff_bits: Optional[int] = None,
                             interpret: Optional[bool] = None,
                             bm: int = 128, bn: int = 128, bk: int = 128):
-    """Padded Pallas plane-GEMM: int8 [..., K] x planes -> int32 [..., N]."""
+    """Padded Pallas plane-GEMM: int8 [..., K] x planes -> int32 [..., N].
+
+    ``eff_bits`` < qw.w_bits runtime-truncates a superplane store: the
+    packed kernel reads only the MSB byte fields in place, the unpacked
+    kernel receives the plane prefix — MXU passes scale with the EFFECTIVE
+    width, not the stored one."""
     interpret = (not _on_tpu()) if interpret is None else interpret
+    eff = qw.w_bits if eff_bits is None else eff_bits
+    if eff != qw.w_bits and not qw.msb_first:
+        raise ValueError(
+            f"effective {eff}b from a fixed {qw.w_bits}b weight needs a "
+            "superplane (msb_first) store")
     lead = x_int8.shape[:-1]
     k, n = qw.kn
     x2 = x_int8.reshape(-1, k)
@@ -162,11 +243,15 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
     if qw.packed is not None:
         packed = _pad_to(_pad_to(qw.packed, bk, 0), bn, 1)
         out = bsm.packed_bitserial_matmul(
-            x2, packed, w_bits=qw.w_bits, signed=qw.signed,
+            x2, packed, w_bits=qw.w_bits, eff_bits=eff, signed=qw.signed,
             bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
     else:
-        planes = _pad_to(_pad_to(qw.planes, bk, 1), bn, 2)
-        out = bsm.bitserial_matmul(x2, planes, w_bits=qw.w_bits,
+        planes = qw.planes
+        if qw.msb_first:
+            planes = planes[: decompose.num_prefix_planes(eff)]
+        planes = _pad_to(_pad_to(planes, bk, 1), bn, 2)
+        out = bsm.bitserial_matmul(x2, planes, w_bits=eff,
+                                   msb_first=qw.msb_first,
                                    bm=bm_eff, bn=bn, bk=bk,
                                    interpret=interpret)
     return out[:m, :n].reshape(*lead, n)
@@ -202,12 +287,25 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
     if qw is None:
         qw = prepare_weight(w.astype(jnp.float32), prec)
 
+    # Runtime precision: the effective width is the POLICY's w_bits, the
+    # stored width is the artifact's.  A superplane store serves any even
+    # effective width below its stored width via plane-prefix truncation.
+    eff_bits = min(prec.w_bits, qw.w_bits)
+    if eff_bits != qw.w_bits and not qw.msb_first:
+        raise ValueError(
+            f"policy asks {eff_bits}b from a fixed {qw.w_bits}b weight; "
+            "runtime truncation needs a superplane store "
+            "(ops.prepare_superplane)")
     x_q, x_s = quantize_activations(x.astype(jnp.float32), prec.a_bits,
                                     signed=a_signed)
     if backend == "decomposed":
-        acc = decompose.decomposed_matmul(x_q, qw.get_planes(), qw.w_bits)
+        planes = qw.get_planes()
+        if qw.msb_first:
+            planes = planes[: decompose.num_prefix_planes(eff_bits)][::-1]
+        acc = decompose.decomposed_matmul(x_q, planes, eff_bits)
     elif backend == "pallas":
-        acc = bitserial_matmul_pallas(x_q, qw)
+        acc = bitserial_matmul_pallas(x_q, qw, eff_bits=eff_bits)
     else:
         raise ValueError(f"unknown backend {backend!r}")
-    return (acc.astype(jnp.float32) * x_s * qw.scale).astype(x.dtype)
+    w_s = qw.eff_scale(eff_bits) if eff_bits != qw.w_bits else qw.scale
+    return (acc.astype(jnp.float32) * x_s * w_s).astype(x.dtype)

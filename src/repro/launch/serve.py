@@ -5,6 +5,12 @@ reference engine for comparison).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --w-bits 4 --kv-bits 8 --requests 8
+
+Runtime-reconfigurable tiers (one 8-bit superplane preload, per-request
+effective precision; requests round-robin over the tiers):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --requests 9
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core.policy import uniform_policy
+from repro.core.policy import uniform_policy, uniform_schedule
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
 from repro.serve.engine import (BatchServeEngine, Request, ServeEngine,
@@ -39,31 +45,57 @@ def main(argv=None):
     ap.add_argument("--decode-chunk", type=int, default=8)
     ap.add_argument("--baseline", action="store_true",
                     help="use the batch-at-a-time reference engine")
+    ap.add_argument("--tiers", nargs="+", default=None, metavar="W/A",
+                    help="runtime precision tiers, e.g. --tiers 8/8 4/4 2/2: "
+                         "ONE superplane preload, requests round-robin over "
+                         "the tiers (even w only; overrides --w/a-bits)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    policy = uniform_policy(args.w_bits, args.a_bits, backend=args.backend)
+    schedule = None
+    if args.tiers:
+        if args.backend == "dense":
+            ap.error("--tiers needs an integer backend")
+        if args.baseline:
+            ap.error("--baseline has no per-request tier switching "
+                     "(it pins one tier); drop --tiers")
+        schedule = uniform_schedule(
+            {t: tuple(int(b) for b in t.split("/")) for t in args.tiers},
+            backend=args.backend)
+        policy = schedule.policy_for()
+    else:
+        policy = uniform_policy(args.w_bits, args.a_bits,
+                                backend=args.backend)
     if args.backend != "dense":
         # Weight preload: planes prepared ONCE, before any request arrives.
+        # With --tiers this is the 8-bit superplane store serving them all.
         t0 = time.time()
-        params, qpaths = prepare_params(params, policy, model,
-                                        packed=args.packed)
+        params, qpaths = prepare_params(params,
+                                        schedule.prepare_policy()
+                                        if schedule else policy,
+                                        model, packed=args.packed,
+                                        superplane=schedule is not None)
+        kind = "superplane" if schedule else f"w{args.w_bits}"
         print(f"prepared {len(qpaths)} weights "
-              f"(w{args.w_bits}, packed={args.packed}) "
+              f"({kind}, packed={args.packed}) "
               f"in {time.time()-t0:.1f}s")
-    rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced)
+    rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced,
+                 schedule=schedule)
     cls = BatchServeEngine if args.baseline else ServeEngine
     kw = {} if args.baseline else {"decode_chunk": args.decode_chunk}
     engine = cls(model, params, rt, max_batch=args.max_batch,
                  max_len=args.max_len, kv_bits=args.kv_bits, **kw)
 
     rng = np.random.default_rng(args.seed)
+    tier_of = (lambda i: args.tiers[i % len(args.tiers)]) if args.tiers \
+        else (lambda i: None)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
-                    max_new_tokens=1 + (args.max_new * (i % 4)) // 3)
+                    max_new_tokens=1 + (args.max_new * (i % 4)) // 3,
+                    tier=tier_of(i))
             for i in range(args.requests)]
     t0 = time.time()
     results = engine.run(reqs)
@@ -74,6 +106,10 @@ def main(argv=None):
           f"({toks/dt:.1f} tok/s)")
     print(f"stats: prefills={st.prefills} decode_steps={st.decode_steps} "
           f"slot_steps={st.decode_slot_steps} chunks={st.decode_chunks}")
+    if args.tiers:
+        per = " ".join(f"{t}:{st.decode_steps_by_tier.get(t, 0)}"
+                       for t in args.tiers)
+        print(f"tier decode_steps: {per} (switches={st.tier_switches})")
     return results
 
 

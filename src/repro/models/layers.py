@@ -14,14 +14,19 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import LayerPrecision, PrecisionPolicy
+from repro.core.policy import LayerPrecision, PrecisionPolicy, PrecisionSchedule
 from repro.distributed.sharding import shard
 from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
 class Runtime:
-    """Per-call execution context threaded through the model."""
+    """Per-call execution context threaded through the model.
+
+    Precision comes from ONE of two sources: a fixed ``policy`` (prepare-time
+    precision, the classic path) or a ``schedule`` + ``tier`` pair (runtime-
+    reconfigurable serving: the engine switches ``tier`` per decode dispatch
+    via :meth:`for_tier` while the superplane weight store stays put)."""
 
     policy: PrecisionPolicy
     mode: str = "train"                 # train | serve
@@ -30,9 +35,19 @@ class Runtime:
     # used for serving parity and small-scale tests.  Training uses the
     # capacity-factor path (standard token-choice with dropping).
     moe_dropless: bool = False
+    schedule: Optional[PrecisionSchedule] = None
+    tier: Optional[str] = None          # active tier name (schedule mode)
 
     def prec(self, name: str) -> LayerPrecision:
+        if self.schedule is not None:
+            return self.schedule.lookup(name, self.tier)
         return self.policy.lookup(name)
+
+    def for_tier(self, tier: Optional[str]) -> "Runtime":
+        """This runtime with the active tier swapped (no-op sans schedule)."""
+        if self.schedule is None:
+            return self
+        return dataclasses.replace(self, tier=tier)
 
 
 # ---------------------------------------------------------------- init utils

@@ -85,7 +85,13 @@ def _ssd_chunked(xh, dt, a, bmat, cmat, d_skip, chunk: int):
                             preferred_element_type=jnp.float32)
         decay = jnp.exp(jnp.clip(cum[:, :, None] - cum[:, None, :], -60, 0))
         att = scores[:, :, :, None] * decay * tri[None, :, :, None]  # [B,Q,Q,H]
-        y_intra = jnp.einsum("bijh,bjhp->bihp", att.astype(dtx_c.dtype), dtx_c,
+        # att stays f32: rounding the decay-score products to bf16 put the
+        # full forward ~4e-2 off the (all-f32) O(1) decode recurrence on deep
+        # hybrid stacks — the jamba decode-parity failure tracked since the
+        # seed.  Only this [B,Q,Q,H] temporary pays the f32 cost; dtx and the
+        # scan carry keep the compute dtype.
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att,
+                             dtx_c.astype(jnp.float32),
                              preferred_element_type=jnp.float32)
         # Inter-chunk contribution from carried state (f32 carry).
         y_inter = jnp.einsum("bin,bhnp->bihp", c_c.astype(jnp.float32), state) \
@@ -218,11 +224,18 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
 
 
 def _final_state(xh, dt, a, bmat):
-    """Final SSD state after a full sequence (for prefill -> decode handoff)."""
+    """Final SSD state after a full sequence (for prefill -> decode handoff).
+
+    ``dtx`` is rounded through the compute dtype exactly like
+    :func:`_ssd_chunked` does, so the handed-off state matches the state the
+    full forward actually evolved — an unrounded f32 ``dtx`` here silently
+    diverged the prefill->decode path from the full forward (the jamba
+    decode-parity failure tracked since the seed)."""
     b, l, h, p = xh.shape
     log_a = a[None, None, :] * dt
     cum = jnp.cumsum(log_a, axis=1)
     total = cum[:, -1]
     w = jnp.exp(jnp.clip(total[:, None] - cum, -60, 0))     # [B, L, H]
-    dtx = xh.astype(jnp.float32) * dt[..., None]
-    return jnp.einsum("bjn,bjh,bjhp->bhnp", bmat.astype(jnp.float32), w, dtx)
+    dtx = (xh.astype(jnp.float32) * dt[..., None]).astype(xh.dtype)
+    return jnp.einsum("bjn,bjh,bjhp->bhnp", bmat.astype(jnp.float32), w,
+                      dtx.astype(jnp.float32))

@@ -9,8 +9,9 @@ planes.
 """
 from repro.serve.engine import (BatchServeEngine, EngineStats, Request,
                                 ServeEngine, prepare_params)
-from repro.serve.scheduler import Scheduler, SlotState
+from repro.serve.scheduler import ANY_TIER, Scheduler, SlotState
 from repro.serve.slots import SlotArena
 
-__all__ = ["BatchServeEngine", "EngineStats", "Request", "ServeEngine",
-           "prepare_params", "Scheduler", "SlotState", "SlotArena"]
+__all__ = ["ANY_TIER", "BatchServeEngine", "EngineStats", "Request",
+           "ServeEngine", "prepare_params", "Scheduler", "SlotState",
+           "SlotArena"]

@@ -7,6 +7,13 @@ through.  The engine mirrors that end to end:
 * **Weight preload** — at construction the float params are converted ONCE
   into the ``QuantizedWeight`` plane pytree (``prepare_params``); that
   prepared pytree is the engine's only weight representation.
+* **Runtime precision tiers** — with a ``PrecisionSchedule`` on the
+  Runtime, the preload is a single 8-bit MSB-first *superplane* store and
+  every decode dispatch picks an effective (w_bits, a_bits) tier by
+  plane-prefix truncation: requests carry a tier, the scheduler groups
+  compatible tiers into a decode batch, and switching tiers costs zero
+  weight re-preparation (``PREPARE_CALLS`` counts preparations — it must
+  not move after construction).
 * **Persistent decode state** — a fixed-slot cache arena
   (:mod:`repro.serve.slots`): per-slot KV lengths and SSM states live in one
   pre-allocated pytree across the whole request stream.
@@ -37,18 +44,36 @@ from repro.models.layers import Runtime
 from repro.models.transformer import LM
 from repro.serve import slots as slots_lib
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import ANY_TIER, Scheduler
 
 __all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
-           "prepare_params"]
+           "prepare_params", "PREPARE_CALLS"]
+
+# Global weight-preparation counter: every prepare_params call (one quantize+
+# decompose sweep over the params) bumps it.  The runtime-tier contract —
+# zero re-preparation after engine construction — is asserted against this
+# in tests and the serve_precision_tiers benchmark.
+PREPARE_CALLS = 0
 
 
 def prepare_params(params, policy: PrecisionPolicy, model: LM,
-                   packed: bool = False):
+                   packed: bool = False, superplane: bool = False):
     """Quantize + decompose every policy-covered projection weight offline.
 
     Returns a params pytree where 2D projection weights are replaced by
-    QuantizedWeight planes (embeddings/norms stay dense)."""
+    QuantizedWeight planes (embeddings/norms stay dense).  ``superplane``
+    prepares the runtime-reconfigurable store instead: 8-bit MSB-first
+    planes regardless of the policy's per-layer w_bits (which then acts per
+    decode dispatch via plane-prefix truncation)."""
+    global PREPARE_CALLS
+    PREPARE_CALLS += 1
+
+    def prep(leaf, prec):
+        if superplane:
+            return ops.prepare_superplane(leaf, signed=prec.w_signed,
+                                          packed=packed)
+        return ops.prepare_weight(leaf, prec, packed=packed)
+
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     quantized_paths = []
@@ -61,8 +86,7 @@ def prepare_params(params, policy: PrecisionPolicy, model: LM,
             name = _path_to_layer_name(path)
             prec = policy.lookup(name)
             if leaf.ndim == 2:
-                qw = ops.prepare_weight(leaf.astype(jnp.float32), prec,
-                                        packed=packed)
+                qw = prep(leaf.astype(jnp.float32), prec)
                 out.append(qw)
                 quantized_paths.append(path)
                 continue
@@ -70,8 +94,7 @@ def prepare_params(params, policy: PrecisionPolicy, model: LM,
             # leading dims.
             lead = leaf.shape[:-2]
             w2 = leaf.reshape((-1,) + leaf.shape[-2:]).astype(jnp.float32)
-            qws = jax.vmap(lambda w: ops.prepare_weight(w, prec,
-                                                        packed=packed))(w2)
+            qws = jax.vmap(lambda w: prep(w, prec))(w2)
             qws = jax.tree.map(
                 lambda a: a.reshape(lead + a.shape[1:]), qws)
             out.append(qws)
@@ -99,10 +122,16 @@ def _params_prepared(params) -> bool:
 def _ensure_prepared(params, rt: Runtime, model: LM, packed: bool):
     """Weight preload shared by both engines: prepare the plane pytree once
     at construction unless the caller already did.  Returns (params, paths
-    of QuantizedWeight leaves)."""
-    backend = rt.policy.default.backend
-    if backend in ("decomposed", "pallas") and not _params_prepared(params):
-        return prepare_params(params, rt.policy, model, packed=packed)
+    of QuantizedWeight leaves).  A Runtime carrying a PrecisionSchedule gets
+    the superplane store (one 8-bit preload serving every tier)."""
+    if rt.schedule is not None:
+        if not _params_prepared(params):
+            return prepare_params(params, rt.schedule.prepare_policy(), model,
+                                  packed=packed, superplane=True)
+    else:
+        backend = rt.policy.default.backend
+        if backend in ("decomposed", "pallas") and not _params_prepared(params):
+            return prepare_params(params, rt.policy, model, packed=packed)
     paths = [jax.tree_util.keystr(kp) for kp, l in
              jax.tree_util.tree_flatten_with_path(
                  params, is_leaf=lambda x: isinstance(
@@ -121,6 +150,10 @@ class EngineStats:
     decode_chunks: int = 0         # jitted multi-step calls dispatched
     decode_slot_steps: int = 0     # sum over steps of active slots (useful)
     decode_idle_slot_steps: int = 0  # masked-out slot-steps (waste bound)
+    tier_switches: int = 0         # decode-phase precision changes
+    decode_steps_by_tier: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
@@ -145,8 +178,15 @@ class ServeEngine:
         self.prompt_bucket = max(1, prompt_bucket)
         # Weight preload: the prepared plane pytree is the engine's ONLY
         # weight representation (prepared here unless already prepared).
+        # With a PrecisionSchedule this is the 8-bit superplane store; every
+        # tier below decodes against it with zero further preparation.
         self.params, self.quantized_paths = _ensure_prepared(
             params, rt, model, packed)
+        self.schedule = rt.schedule
+        # The tier the decode batch currently runs at (schedule mode only):
+        # admission is restricted to this tier while any slot is occupied.
+        self._active_tier: Optional[str] = None
+        self._last_tier: Optional[str] = None
 
         self.arena = slots_lib.SlotArena(model, max_batch, max_len,
                                          kv_bits=kv_bits)
@@ -157,30 +197,36 @@ class ServeEngine:
         self._tok = np.zeros((max_batch,), np.int32)
         self._remaining = np.zeros((max_batch,), np.int32)
 
-        def prefill_slot(params, caches, slot, tokens, length):
+        def prefill_slot(params, caches, slot, tokens, length, tier=None):
             """Admit one request: reset slot, prefill its prompt (right-
             padded to a bucket), write the batch-1 cache back into the
-            arena.  Retraces only per prompt bucket."""
+            arena.  Retraces only per (prompt bucket x tier)."""
+            rt_eff = self.rt.for_tier(tier)
             sub = slots_lib.slot_view(caches, slot)
             sub = jax.tree.map(jnp.zeros_like, sub)     # per-slot reset
             logits, sub = self.model.prefill(
-                params, self.rt, sub, tokens=tokens,
+                params, rt_eff, sub, tokens=tokens,
                 seq_lengths=length.reshape(1))
             caches = slots_lib.slot_write(caches, sub, slot)
             tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
             return tok, caches
 
-        def decode_chunk_fn(params, caches, tok, remaining, n_steps):
+        def decode_chunk_fn(params, caches, tok, remaining, n_steps,
+                            tier=None):
             """The single jitted inner loop: ``n_steps`` decode steps as one
             lax.scan with an active mask.  A slot's budget hitting zero
             freezes its cache (masked writes) THAT step; its lane still
             flows through the matmuls (dense batch) but produces no state
-            change and no emitted token."""
+            change and no emitted token.  ``tier`` (static) selects the
+            effective precision: the same weight store, a different plane
+            prefix / activation depth — at most tiers x decode_chunk traces."""
+            rt_eff = self.rt.for_tier(tier)
+
             def step(carry, _):
                 tok, caches, remaining = carry
                 active = remaining > 0
                 logits, caches = self.model.decode_step(
-                    params, self.rt, caches, tokens=tok[:, None],
+                    params, rt_eff, caches, tokens=tok[:, None],
                     active=active)
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                 tok = jnp.where(active, nxt, tok)
@@ -191,9 +237,10 @@ class ServeEngine:
                 step, (tok, caches, remaining), None, length=n_steps)
             return caches, tok, remaining, toks, actives
 
-        self._prefill_slot = jax.jit(prefill_slot)
+        self._prefill_slot = jax.jit(prefill_slot,
+                                     static_argnames=("tier",))
         self._decode_chunk = jax.jit(decode_chunk_fn,
-                                     static_argnames=("n_steps",))
+                                     static_argnames=("n_steps", "tier"))
 
     # ----------------------------------------------------------------- intake
     def submit(self, request: Request) -> None:
@@ -210,6 +257,21 @@ class ServeEngine:
         if request.uid in self._seen_uids:
             raise ValueError(f"request uid {request.uid} already submitted "
                              "(results are keyed by uid)")
+        if self.schedule is None:
+            if request.tier is not None:
+                raise ValueError(
+                    f"request {request.uid}: tier {request.tier!r} on an "
+                    "engine without a PrecisionSchedule")
+        else:
+            # Normalize onto a copy: every QUEUED request carries a concrete
+            # tier name, but the caller's object stays untouched.
+            if request.tier is not None \
+                    and request.tier not in self.schedule.tiers:
+                raise ValueError(
+                    f"request {request.uid}: unknown tier {request.tier!r}; "
+                    f"engine serves {sorted(self.schedule.tiers)}")
+            request = dataclasses.replace(
+                request, tier=request.tier or self.schedule.default_tier)
         self._seen_uids.add(request.uid)
         self.scheduler.submit(request)
 
@@ -224,13 +286,25 @@ class ServeEngine:
 
     def _admit_free_slots(self) -> None:
         for slot in self.scheduler.free_slots():
-            req = self.scheduler.admit(slot)
+            if self.schedule is None:
+                req = self.scheduler.admit(slot)
+            else:
+                if self._active_tier is None:
+                    # Idle decode batch: the oldest waiting request picks
+                    # the next tier (FIFO across tier groups).
+                    nxt = self.scheduler.next_tier()
+                    if nxt is None:
+                        break
+                    if self.stats.decode_chunks:
+                        self.stats.tier_switches += nxt != self._last_tier
+                    self._active_tier = nxt
+                req = self.scheduler.admit(slot, tier=self._active_tier)
             if req is None:
                 break
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
             tok, self.arena.caches = self._prefill_slot(
                 self.params, self.arena.caches, jnp.int32(slot),
-                jnp.asarray(padded), jnp.int32(plen))
+                jnp.asarray(padded), jnp.int32(plen), tier=req.tier)
             self.stats.prefills += 1
             self.stats.prefill_tokens += plen
             first = int(tok)
@@ -242,7 +316,12 @@ class ServeEngine:
     # ------------------------------------------------------------------- run
     def step(self) -> None:
         """One scheduling round: admit into free slots, then run one jitted
-        decode chunk and account its tokens."""
+        decode chunk (at the active precision tier, if tiered) and account
+        its tokens."""
+        if not self.scheduler.occupied():
+            if self._active_tier is not None:     # keep across idle steps
+                self._last_tier = self._active_tier
+            self._active_tier = None              # batch drained: re-tier
         self._admit_free_slots()
         self.scheduler.release_done()             # max_new_tokens == 1 cases
         occupied = self.scheduler.occupied()
@@ -255,7 +334,8 @@ class ServeEngine:
         (self.arena.caches, tok, remaining, toks, actives) = \
             self._decode_chunk(self.params, self.arena.caches,
                                jnp.asarray(self._tok),
-                               jnp.asarray(self._remaining), n_steps=n_steps)
+                               jnp.asarray(self._remaining), n_steps=n_steps,
+                               tier=self._active_tier)
         self._tok = np.array(tok)            # copies: host arrays stay writable
         self._remaining = np.array(remaining)
         toks = np.asarray(toks)                   # [n_steps, B]
@@ -264,6 +344,13 @@ class ServeEngine:
         self.stats.decode_steps += n_steps
         self.stats.decode_slot_steps += int(actives.sum())
         self.stats.decode_idle_slot_steps += int((~actives).sum())
+        if self._active_tier is not None:
+            by_tier = self.stats.decode_steps_by_tier
+            by_tier[self._active_tier] = \
+                by_tier.get(self._active_tier, 0) + n_steps
+            tk = self.stats.tokens_by_tier
+            tk[self._active_tier] = \
+                tk.get(self._active_tier, 0) + int(actives.sum())
         for slot, state in occupied:
             for s in range(n_steps):
                 if actives[s, slot]:
@@ -297,8 +384,15 @@ class BatchServeEngine:
 
     def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
                  max_len: int = 512, kv_bits: Optional[int] = None,
-                 packed: bool = False):
+                 packed: bool = False, tier: Optional[str] = None):
         self.model = model
+        if rt.schedule is not None and tier is not None \
+                and tier not in rt.schedule.tiers:
+            raise ValueError(f"unknown tier {tier!r}; engine serves "
+                             f"{sorted(rt.schedule.tiers)}")
+        # The baseline runs EVERY request at one fixed tier (it has no
+        # per-request switching); ``tier`` pins it, default tier otherwise.
+        rt = rt.for_tier(tier) if rt.schedule is not None else rt
         self.rt = rt
         self.params, _ = _ensure_prepared(params, rt, model, packed)
         self.max_batch = max_batch

@@ -12,3 +12,7 @@ class Request:
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16     # total tokens returned (>= 1; results come
                                  # from ServeEngine.run / .results)
+    tier: str = None             # precision tier name (engines with a
+                                 # PrecisionSchedule; None = default tier /
+                                 # no tiering.  The engine normalizes this
+                                 # at submit time.)

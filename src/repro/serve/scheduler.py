@@ -4,6 +4,12 @@ Pure bookkeeping, no JAX: a FIFO waiting queue plus per-slot state (which
 request occupies the slot, tokens emitted so far, decode budget remaining).
 The engine asks for free slots after every decode chunk and admits waiting
 requests into them — occupied slots are never re-prefilled.
+
+Precision-tiered serving (``Request.tier``): a decode batch runs at ONE
+effective precision, so admission can be constrained to requests whose tier
+matches the currently decoding one (``admit(slot, tier=...)``) — FIFO within
+a tier, tier-grouping across tiers.  Untiered engines pass no constraint and
+keep strict FIFO.
 """
 from __future__ import annotations
 
@@ -35,8 +41,12 @@ class SlotState:
         return self.remaining <= 0
 
 
+ANY_TIER = object()   # admit() sentinel: no tier constraint (strict FIFO)
+
+
 class Scheduler:
-    """FIFO admission over a fixed number of slots."""
+    """FIFO admission over a fixed number of slots (tier-grouped when the
+    engine serves precision tiers)."""
 
     def __init__(self, num_slots: int):
         self.num_slots = num_slots
@@ -51,14 +61,32 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def admit(self, slot: int) -> Optional[Request]:
-        """Pop the next waiting request into ``slot``; None if queue empty."""
+    def next_tier(self) -> Optional[str]:
+        """Tier of the oldest waiting request (None when queue empty or the
+        request carries no tier) — what an idle engine should switch to."""
+        return self.waiting[0].tier if self.waiting else None
+
+    def admit(self, slot: int, tier=ANY_TIER) -> Optional[Request]:
+        """Pop the next *compatible* waiting request into ``slot``.
+
+        ``tier=ANY_TIER`` takes the FIFO head; a tier name takes the oldest
+        waiting request of THAT tier (requests of other tiers keep their
+        queue position and wait for their tier's decode phase).  Returns
+        None if no compatible request waits."""
         if self.slots[slot] is not None:
             raise ValueError(f"slot {slot} is occupied (uid "
                              f"{self.slots[slot].uid})")
-        if not self.waiting:
-            return None
-        req = self.waiting.popleft()
+        if tier is ANY_TIER:
+            if not self.waiting:
+                return None
+            req = self.waiting.popleft()
+        else:
+            idx = next((i for i, r in enumerate(self.waiting)
+                        if r.tier == tier), None)
+            if idx is None:
+                return None
+            req = self.waiting[idx]
+            del self.waiting[idx]
         self.slots[slot] = SlotState(request=req,
                                      remaining=req.max_new_tokens)
         return req

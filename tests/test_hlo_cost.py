@@ -31,9 +31,12 @@ def test_scan_flops_scaled_by_trip_count():
     a_unroll = _analyze(f_unroll, x, ws)
     assert a_scan["flops"] == pytest.approx(exp, rel=0.01)
     assert a_unroll["flops"] == pytest.approx(exp, rel=0.01)
-    # XLA's own cost_analysis undercounts the scan (sanity of the premise):
-    xla = jax.jit(f_scan).lower(x, ws).compile().cost_analysis()["flops"]
-    assert xla < exp / 4
+    # XLA's own cost_analysis undercounts the scan (sanity of the premise).
+    # Older jax returns a one-element list of dicts, newer returns the dict.
+    ca = jax.jit(f_scan).lower(x, ws).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < exp / 4
 
 
 def test_nested_scan():

@@ -91,6 +91,9 @@ def test_quantized_weight_prepare_roundtrip():
     assert qw.planes.shape == (2, 64, 32)          # 5-bit = 3-2 decomposition
     q = decompose.recompose_weights(qw.planes, 5)
     back = np.asarray(q).astype(np.float32) * np.asarray(qw.scale)
+    # Odd widths keep round-to-nearest (half-LSB bound); even widths use
+    # nested truncation, whose 1-LSB floor bound is covered by
+    # tests/test_precision_tiers.py.
     assert np.abs(back - w).max() <= np.asarray(qw.scale).max() * 0.51 + 1e-6
 
 

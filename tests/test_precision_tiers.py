@@ -1,0 +1,281 @@
+"""Runtime-reconfigurable precision serving: one preloaded superplane store,
+any even (w_bits, a_bits) at decode time.
+
+Covers the refactor's contracts end to end:
+
+  * nested quantization — the b-bit code is the LSB-truncation of the 8-bit
+    code, for every even b;
+  * plane-prefix parity — truncated-superplane matmul is BIT-EXACT with a
+    weight freshly prepared at the effective width, for all three integer
+    backends (decomposed HLO, unpacked Pallas, packed Pallas) and both
+    signedness modes;
+  * schedule semantics — tier lookup, per-tier layer rules, validation;
+  * tier-grouped admission in the scheduler;
+  * engine semantics — two tiers decoding in the same slot arena are
+    token-identical to single-tier engines, with ZERO weight preparation
+    after construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import decompose, quant
+from repro.core.policy import (LayerPrecision, PrecisionSchedule,
+                               uniform_policy, uniform_schedule)
+from repro.kernels import ops
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve import engine as engine_mod
+from repro.serve.engine import BatchServeEngine, Request, ServeEngine
+from repro.serve.scheduler import Scheduler
+
+EVEN_BITS = (2, 4, 6, 8)
+
+
+# ------------------------------------------------------- nested quantization
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("bits", EVEN_BITS)
+def test_nested_quantize_is_truncation_of_8bit(bits, signed):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    cfg = quant.QuantConfig(bits=bits, signed=signed, per_channel=True,
+                            channel_axis=-1)
+    q, s = quant.nested_quantize(x, cfg)
+    cfg8 = quant.QuantConfig(bits=8, signed=signed, per_channel=True,
+                             channel_axis=-1)
+    q8, s8 = quant.quantize(x, cfg8)
+    np.testing.assert_array_equal(
+        np.asarray(q, np.int32), np.asarray(q8, np.int32) >> (8 - bits))
+    np.testing.assert_array_equal(
+        np.asarray(s), np.asarray(s8) * float(1 << (8 - bits)))
+
+
+def test_superplane_prefix_recomposes_to_truncated_code():
+    rng = np.random.default_rng(0)
+    for signed in (True, False):
+        lo, hi = decompose.weight_range(8, signed)
+        q8 = jnp.asarray(rng.integers(lo, hi + 1, size=(33, 17)), jnp.int32)
+        planes = decompose.decompose_superplanes(q8, signed=signed)
+        assert planes.shape == (4, 33, 17)
+        for eff in EVEN_BITS:
+            got = decompose.recompose_superplane_prefix(planes, eff,
+                                                        signed=signed)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(q8) >> (8 - eff))
+
+
+# ----------------------------------------------------- plane-prefix parity
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("eff_bits", EVEN_BITS)
+def test_truncated_superplane_bit_exact_with_fresh_prepare(eff_bits, signed):
+    """The satellite contract: for every even w_bits' <= 8 and both
+    signedness modes, the truncated-superplane matmul equals a freshly
+    prepared w_bits' weight on the unpacked, packed, and decomposed
+    backends — bit-exact, including scales."""
+    rng = np.random.default_rng(eff_bits + 10 * signed)
+    w = jnp.asarray(rng.normal(size=(96, 80)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(7, 96)), jnp.float32)
+
+    sp_u = ops.prepare_superplane(w, signed=signed, packed=False)
+    sp_p = ops.prepare_superplane(w, signed=signed, packed=True)
+    assert sp_u.msb_first and sp_u.w_bits == 8
+
+    prec_dec = LayerPrecision(w_bits=eff_bits, a_bits=8, w_signed=signed,
+                              backend="decomposed")
+    prec_pal = prec_dec.with_backend("pallas")
+    fresh_u = ops.prepare_weight(w, prec_dec, packed=False)
+    fresh_p = ops.prepare_weight(w, prec_dec, packed=True)
+
+    # Artifact-level: truncation reproduces the fresh preparation exactly.
+    tr_u = ops.truncate_weight(sp_u, eff_bits)
+    np.testing.assert_array_equal(np.asarray(tr_u.planes),
+                                  np.asarray(fresh_u.planes))
+    np.testing.assert_array_equal(np.asarray(tr_u.scale),
+                                  np.asarray(fresh_u.scale))
+    tr_p = ops.truncate_weight(sp_p, eff_bits)
+    np.testing.assert_array_equal(np.asarray(tr_p.packed),
+                                  np.asarray(fresh_p.packed))
+
+    # Matmul-level: runtime truncation == fresh weights, every backend.
+    want = np.asarray(ops.matmul(x, None, prec_dec, qw=fresh_u), np.float32)
+    for prec, qw, label in [
+        (prec_dec, sp_u, "decomposed/unpacked"),
+        (prec_dec, sp_p, "decomposed/packed"),
+        (prec_pal, sp_u, "pallas/unpacked"),
+        (prec_pal, sp_p, "pallas/packed"),
+        (prec_pal, fresh_p, "pallas/fresh-packed"),
+    ]:
+        got = np.asarray(ops.matmul(x, None, prec, qw=qw), np.float32)
+        np.testing.assert_array_equal(got, want, err_msg=label)
+
+
+def test_runtime_truncation_requires_superplane():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    qw = ops.prepare_weight(w, LayerPrecision(w_bits=8, a_bits=8,
+                                              backend="decomposed"))
+    with pytest.raises(ValueError, match="superplane"):
+        ops.matmul(x, None, LayerPrecision(w_bits=4, a_bits=8,
+                                           backend="decomposed"), qw=qw)
+    with pytest.raises(ValueError, match="superplane"):
+        ops.truncate_weight(qw, 4)
+
+
+def test_packed_kernel_eff_bits_mxu_pass_law():
+    """The packed kernel reads only eff_bits/2 fields: effective width sets
+    the arithmetic, independent of the stored byte."""
+    from repro.kernels.bitserial_matmul import packed_bitserial_matmul
+    rng = np.random.default_rng(3)
+    q8 = rng.integers(-128, 128, size=(128, 128))
+    planes = decompose.decompose_weights(jnp.asarray(q8), 8)
+    packed = ops.pack_planes(planes, 8)
+    x = jnp.asarray(rng.integers(-128, 128, size=(128, 128)), jnp.int8)
+    for eff in EVEN_BITS:
+        got = packed_bitserial_matmul(x, packed, w_bits=8, eff_bits=eff,
+                                      interpret=True)
+        want = np.asarray(x, np.int64) @ (q8 >> (8 - eff))
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ----------------------------------------------------------------- schedule
+def test_schedule_lookup_rules_and_validation():
+    sched = PrecisionSchedule(
+        tiers={"hi": LayerPrecision(8, 8, backend="decomposed"),
+               "lo": LayerPrecision(2, 4, backend="decomposed")},
+        rules={"lo": {"*.o_proj": LayerPrecision(4, 4,
+                                                 backend="decomposed")}})
+    assert sched.default_tier == "hi"
+    assert sched.lookup("layers.pos0.attn.q_proj", "lo").w_bits == 2
+    assert sched.lookup("layers.pos0.attn.o_proj", "lo").w_bits == 4
+    assert sched.lookup("layers.pos0.attn.o_proj").w_bits == 8  # default tier
+    pol = sched.policy_for("lo")
+    assert pol.lookup("x.o_proj").w_bits == 4 and pol.default.w_bits == 2
+    assert sched.prepare_policy().default.w_bits == 8
+
+    with pytest.raises(ValueError, match="truncatable"):
+        uniform_schedule({"odd": (5, 8)})
+    with pytest.raises(ValueError, match="backend"):
+        uniform_schedule({"t": (4, 8)}, backend="fake_quant")
+    with pytest.raises(ValueError, match="w_signed"):
+        PrecisionSchedule(tiers={
+            "a": LayerPrecision(4, 8, backend="decomposed"),
+            "b": LayerPrecision(4, 8, w_signed=False, backend="decomposed")})
+    with pytest.raises(ValueError, match="at least one"):
+        PrecisionSchedule(tiers={})
+    with pytest.raises(KeyError):
+        sched.lookup("x", "nope")
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_tier_grouped_admission():
+    sched = Scheduler(2)
+    for i, t in enumerate(["a", "b", "a", "b"]):
+        sched.submit(Request(uid=i, prompt=np.array([1]), max_new_tokens=2,
+                             tier=t))
+    assert sched.next_tier() == "a"
+    # Tier-constrained admission skips queued other-tier requests (they keep
+    # their FIFO position for their own tier's phase).
+    assert sched.admit(0, tier="a").uid == 0
+    assert sched.admit(1, tier="a").uid == 2
+    assert sched.next_tier() == "b"
+    sched.slots[0] = None
+    assert sched.admit(0, tier=None) is None     # no untiered request waits
+    assert sched.admit(0, tier="b").uid == 1     # FIFO within tier b
+    sched.slots[1] = None
+    assert sched.admit(1).uid == 3               # unconstrained: FIFO head
+
+
+# ------------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule({"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    return cfg, model, params, sched, rt
+
+
+def _reqs(cfg, tiers, seed=7, budget=lambda i: 2 + i % 3):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=3 + i % 4),
+                    max_new_tokens=budget(i), tier=t)
+            for i, t in enumerate(tiers)]
+
+
+def test_engine_two_tiers_one_arena_match_single_tier_engines(setup):
+    """The acceptance criterion: one engine constructed once serves mixed
+    tiers from one preloaded store — zero preparation after construction —
+    and each tier's outputs are token-identical to (a) a fixed-tier engine
+    sharing the store and (b) an engine prepared NATIVELY at that
+    precision."""
+    cfg, model, params, sched, rt = setup
+    tiers = ["4/4", "2/2", "2/2", "4/4", "4/4", "2/2"]
+    reqs = _reqs(cfg, tiers)
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=3)
+    preps = engine_mod.PREPARE_CALLS
+    got = eng.run(reqs)
+    assert engine_mod.PREPARE_CALLS == preps, "re-prepared weights mid-run"
+    assert set(eng.stats.decode_steps_by_tier) == {"4/4", "2/2"}
+    assert eng.stats.tier_switches >= 1
+
+    for tier, (w, a) in (("4/4", (4, 4)), ("2/2", (2, 2))):
+        sub = [r for r in reqs if r.tier == tier]
+        # (a) fixed-tier baseline over the SAME superplane store
+        base = BatchServeEngine(model, eng.params, rt, max_batch=1,
+                                max_len=64, tier=tier)
+        want = base.run([Request(uid=r.uid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens, tier=tier)
+                         for r in sub])
+        for r in sub:
+            assert got[r.uid] == want[r.uid], (tier, r.uid)
+        # (b) natively prepared at the tier precision (no schedule at all)
+        native = ServeEngine(
+            model, params,
+            Runtime(policy=uniform_policy(w, a, backend="decomposed"),
+                    mode="serve", moe_dropless=True),
+            max_batch=2, max_len=64, decode_chunk=3)
+        want_n = native.run([Request(uid=r.uid, prompt=r.prompt,
+                                     max_new_tokens=r.max_new_tokens)
+                             for r in sub])
+        for r in sub:
+            assert got[r.uid] == want_n[r.uid], ("native", tier, r.uid)
+
+
+def test_engine_superplane_store_is_single_8bit_artifact(setup):
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=32)
+    qws = [l for l in jax.tree.leaves(
+        eng.params, is_leaf=lambda x: isinstance(x, ops.QuantizedWeight))
+        if isinstance(l, ops.QuantizedWeight)]
+    assert qws and all(q.w_bits == 8 and q.msb_first for q in qws)
+
+
+def test_engine_default_tier_and_validation(setup):
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=32)
+    mine = Request(uid=0, prompt=np.array([1, 2]), max_new_tokens=2)
+    eng.submit(mine)
+    assert eng.scheduler.waiting[0].tier == "8/8"   # normalized to default
+    assert mine.tier is None                        # caller's object untouched
+    with pytest.raises(ValueError, match="unknown tier"):
+        eng.submit(Request(uid=1, prompt=np.array([1]), max_new_tokens=1,
+                           tier="3/3"))
+    # Untiered engine rejects tiered requests.
+    plain = ServeEngine(
+        model, params,
+        Runtime(policy=uniform_policy(8, 8, backend="dense"), mode="serve",
+                moe_dropless=True),
+        max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="without a PrecisionSchedule"):
+        plain.submit(Request(uid=0, prompt=np.array([1]), max_new_tokens=1,
+                             tier="8/8"))
+    with pytest.raises(ValueError, match="unknown tier"):
+        BatchServeEngine(model, params, rt, max_batch=2, max_len=32,
+                         tier="9/9")

@@ -177,6 +177,37 @@ def recompose_superplane_prefix(planes_msb, eff_bits: int, *,
     return recompose_weights(prefix[::-1], eff_bits, signed=signed)
 
 
+def decomposed_matmul_grouped(x_int, planes_msb, row_groups):
+    """Per-row-group effective-width oracle (mixed-tier decode batches).
+
+    ``x_int``'s leading axis is already sorted into contiguous tier groups;
+    ``row_groups`` is a static tuple of ``(rows, eff_bits)`` covering it.
+    Each group matmuls against its own MSB plane prefix of the superplane
+    store — one plane-prefix GEMM per group — and the results are
+    reassembled along the leading axis.
+
+    Args:
+      x_int: int array [B, ..., K] (quantized activations).
+      planes_msb: int8 [4, K, N] MSB-first superplane store.
+      row_groups: static tuple of (rows, eff_bits), summing to B; eff_bits
+        in RUNTIME_W_BITS.
+
+    Returns:
+      int32 [B, ..., N] exact per-group MAC result.
+    """
+    total = sum(r for r, _ in row_groups)
+    if total != x_int.shape[0]:
+        raise ValueError(f"row_groups cover {total} rows, x has "
+                         f"{x_int.shape[0]}")
+    outs, off = [], 0
+    for rows, eff_bits in row_groups:
+        prefix = superplane_prefix(planes_msb, eff_bits)[::-1]  # LSB-first
+        outs.append(decomposed_matmul(x_int[off:off + rows], prefix,
+                                      eff_bits))
+        off += rows
+    return jnp.concatenate(outs, axis=0)
+
+
 def decomposed_matmul(x_int, w_planes, w_bits: int):
     """``x_int @ recompose(w_planes)`` computed the paper's way: one integer
     matmul per plane, partial sums combined with shifts (the TPU analogue of

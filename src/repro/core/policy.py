@@ -23,6 +23,12 @@ BACKENDS = ("dense", "fake_quant", "decomposed", "pallas")
 
 @dataclasses.dataclass(frozen=True)
 class LayerPrecision:
+    """One layer's (w_bits, a_bits, signedness, backend) operating point.
+
+    Frozen and hashable on purpose: LayerPrecision values travel as
+    JIT-STATIC data — they key traces (e.g. as members of the per-row-group
+    tuples in ``kernels.ops.matmul``) and must never be traced arrays."""
+
     w_bits: int = 8
     a_bits: int = 8
     w_signed: bool = True
@@ -36,6 +42,7 @@ class LayerPrecision:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
 
     def with_backend(self, backend: str) -> "LayerPrecision":
+        """This precision with the execution backend swapped."""
         return dataclasses.replace(self, backend=backend)
 
 
@@ -54,18 +61,24 @@ class PrecisionPolicy:
     default: LayerPrecision = DEFAULT_PRECISION
 
     def lookup(self, name: str) -> LayerPrecision:
+        """Precision for one layer name (first matching rule, else default).
+
+        Pure host-side string matching — call it OUTSIDE traced code or on
+        static names only (layer names are static throughout the model)."""
         for pattern, prec in self.rules.items():
             if fnmatch.fnmatch(name, pattern):
                 return prec
         return self.default
 
     def with_backend(self, backend: str) -> "PrecisionPolicy":
+        """Every rule and the default re-targeted to ``backend``."""
         return PrecisionPolicy(
             rules={k: v.with_backend(backend) for k, v in self.rules.items()},
             default=self.default.with_backend(backend),
         )
 
     def average_bits(self, layer_names, param_counts=None) -> float:
+        """Parameter-weighted mean weight bitwidth over ``layer_names``."""
         names = list(layer_names)
         counts = param_counts or [1] * len(names)
         tot = sum(counts)
@@ -74,6 +87,7 @@ class PrecisionPolicy:
 
 def uniform_policy(w_bits: int, a_bits: int, backend: str = "fake_quant",
                    a_signed: bool = True) -> PrecisionPolicy:
+    """Single-precision policy: every layer at (w_bits, a_bits)."""
     return PrecisionPolicy(default=LayerPrecision(
         w_bits=w_bits, a_bits=a_bits, backend=backend, a_signed=a_signed))
 
@@ -89,6 +103,13 @@ def uniform_policy(w_bits: int, a_bits: int, backend: str = "fake_quant",
 from repro.core.decompose import RUNTIME_W_BITS  # noqa: E402
 
 
+# Per-request KV-cache precision tiers (the decode-memory analogue of the
+# weight plane prefix): a schedule may map each tier to a KV storage
+# precision — None (bf16), 8 (int8) or 4 (int4-packed).  16 is the internal
+# tier code for bf16 in the per-slot arena.
+KV_TIER_CHOICES = (None, 8, 4)
+
+
 @dataclasses.dataclass
 class PrecisionSchedule:
     """Named runtime tiers over one preloaded superplane weight store.
@@ -97,12 +118,22 @@ class PrecisionSchedule:
     optionally refines single tiers per layer-name glob (first match wins,
     same contract as PrecisionPolicy).  All precisions must share
     ``w_signed`` (signedness is baked into the stored MSB plane) and use an
-    integer serving backend with an even, truncatable ``w_bits``."""
+    integer serving backend with an even, truncatable ``w_bits``.
+
+    ``kv_tiers`` optionally maps tier name -> KV-cache storage precision
+    (None = bf16, 8 = int8, 4 = int4-packed; tiers left out default to
+    bf16).  When set, a tiered engine allocates ONE mixed per-slot KV arena
+    and every admitted request's slot stores K/V at its tier's KV
+    precision — a low tier then shrinks both its weight-plane reads and its
+    decode-memory footprint.  Tier names and the derived mode set are
+    jit-static; the per-slot tier assignment is traced data
+    (``KVCache.kv_bits``)."""
 
     tiers: Dict[str, LayerPrecision]
     rules: Dict[str, Dict[str, LayerPrecision]] = dataclasses.field(
         default_factory=dict)
     default_tier: Optional[str] = None
+    kv_tiers: Optional[Dict[str, Optional[int]]] = None
 
     def __post_init__(self):
         if not self.tiers:
@@ -115,6 +146,14 @@ class PrecisionSchedule:
         for t in self.rules:
             if t not in self.tiers:
                 raise ValueError(f"rules for unknown tier {t!r}")
+        if self.kv_tiers is not None:
+            for t, kb in self.kv_tiers.items():
+                if t not in self.tiers:
+                    raise ValueError(f"kv_tiers for unknown tier {t!r}")
+                if kb not in KV_TIER_CHOICES:
+                    raise ValueError(
+                        f"kv tier must be one of {KV_TIER_CHOICES} "
+                        f"(None = bf16), got {kb!r} for tier {t!r}")
         signs = set()
         for prec in self._all_precisions():
             if prec.backend not in ("decomposed", "pallas"):
@@ -143,6 +182,31 @@ class PrecisionSchedule:
     @property
     def w_signed(self) -> bool:
         return next(iter(self.tiers.values())).w_signed
+
+    # ------------------------------------------------------------ kv tiers
+    def kv_bits_for(self, tier: Optional[str] = None) -> Optional[int]:
+        """KV storage precision of a tier (None = bf16) — what a
+        fixed-precision reference engine at that tier uses globally."""
+        tier = self.default_tier if tier is None else tier
+        if tier not in self.tiers:
+            raise KeyError(f"unknown tier {tier!r}; have {sorted(self.tiers)}")
+        if self.kv_tiers is None:
+            return None
+        return self.kv_tiers.get(tier)
+
+    def kv_code_for(self, tier: Optional[str] = None) -> int:
+        """Per-slot arena tier code of a tier (16 = bf16, 8, 4)."""
+        kb = self.kv_bits_for(tier)
+        return 16 if kb is None else kb
+
+    @property
+    def kv_modes(self) -> Optional[tuple]:
+        """Static mode set the mixed per-slot KV arena must serve
+        (descending tier codes), or None when no kv_tiers are declared."""
+        if self.kv_tiers is None:
+            return None
+        codes = {self.kv_code_for(t) for t in self.tiers}
+        return tuple(sorted(codes, reverse=True))
 
     def lookup(self, name: str, tier: Optional[str] = None) -> LayerPrecision:
         tier = self.default_tier if tier is None else tier
@@ -173,12 +237,17 @@ class PrecisionSchedule:
 
 def uniform_schedule(tiers: Dict[str, tuple],
                      backend: str = "decomposed",
-                     a_signed: bool = True) -> PrecisionSchedule:
-    """Schedule from ``{name: (w_bits, a_bits)}`` pairs, uniform per tier."""
+                     a_signed: bool = True,
+                     kv_tiers: Optional[Dict[str, Optional[int]]] = None
+                     ) -> PrecisionSchedule:
+    """Schedule from ``{name: (w_bits, a_bits)}`` pairs, uniform per tier.
+
+    ``kv_tiers`` optionally maps tier names to KV-cache storage precisions
+    (None = bf16, 8, 4) — see :class:`PrecisionSchedule`."""
     return PrecisionSchedule(tiers={
         name: LayerPrecision(w_bits=w, a_bits=a, backend=backend,
                              a_signed=a_signed)
-        for name, (w, a) in tiers.items()})
+        for name, (w, a) in tiers.items()}, kv_tiers=kv_tiers)
 
 
 def allocate_bits_by_sensitivity(sensitivities: Dict[str, float],

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def gpipe(stage_fn: Callable, *, axis_name: str = "stage"):
     """Build a pipelined forward for ``y = stage_{S-1}(... stage_0(x))``.
@@ -78,7 +80,7 @@ def run_pipeline(mesh: Mesh, stage_fn: Callable, stage_params, x_micro,
         mask = (stage == n_stages - 1).astype(out.dtype)
         return jax.lax.psum(out * mask, axis_name)
 
-    f = jax.shard_map(shmapped, mesh=mesh,
+    f = shard_map(shmapped, mesh=mesh,
                       in_specs=(P(axis_name), P()), out_specs=P(),
                       check_vma=False)
     return f(stage_params, x_micro)

@@ -19,6 +19,25 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# shard_map moved from jax.experimental to the jax top level across JAX
+# releases, and its replication-check kwarg was renamed check_rep ->
+# check_vma in the move.  Resolve both once here so every shard_map user
+# (tp_matmul, pipeline, tests) works on both sides of the move; callers
+# use the new-style ``check_vma`` spelling.
+try:
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # newer jax removed the experimental alias
+    _shard_map = jax.shard_map
+
+
+def shard_map(f, *args, check_vma: Optional[bool] = None, **kwargs):
+    import inspect
+    if check_vma is not None:
+        params = inspect.signature(_shard_map).parameters
+        kwargs["check_vma" if "check_vma" in params else "check_rep"] = \
+            check_vma
+    return _shard_map(f, *args, **kwargs)
+
 Axis = Union[str, Sequence[str], None]
 
 # Logical name -> preferred mesh axes (first match present in mesh wins; for

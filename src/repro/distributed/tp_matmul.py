@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def _quantize_rows(x, qmax=127.0):
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
@@ -85,7 +87,7 @@ def tp_mlp_block(mesh: Mesh, x, w_up, w_down, *, axis_name: str = "model",
                                   tiled=True)
 
     lead = tuple([None] * (x.ndim - 1))
-    fm = jax.shard_map(
+    fm = shard_map(
         body, mesh=mesh,
         in_specs=(P(*lead, axis_name),       # x: SP on last dim
                   P(None, axis_name),        # w_up: N-sharded

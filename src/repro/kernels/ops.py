@@ -220,6 +220,7 @@ def act_quant_pallas(x, *, a_bits: int = 8, signed: bool = True,
 
 def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
                             eff_bits: Optional[int] = None,
+                            row_groups: Optional[tuple] = None,
                             interpret: Optional[bool] = None,
                             bm: int = 128, bn: int = 128, bk: int = 128):
     """Padded Pallas plane-GEMM: int8 [..., K] x planes -> int32 [..., N].
@@ -227,7 +228,24 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
     ``eff_bits`` < qw.w_bits runtime-truncates a superplane store: the
     packed kernel reads only the MSB byte fields in place, the unpacked
     kernel receives the plane prefix — MXU passes scale with the EFFECTIVE
-    width, not the stored one."""
+    width, not the stored one.
+
+    ``row_groups`` (static tuple of ``(rows, eff_bits)``, covering x's
+    leading axis) is the mixed-tier decode path: the batch is already
+    sorted into contiguous tier groups, one plane-prefix GEMM runs per
+    group (both the packed and unpacked kernels), and the per-group int32
+    results are reassembled along the leading axis."""
+    if row_groups is not None:
+        if sum(r for r, _ in row_groups) != x_int8.shape[0]:
+            raise ValueError(f"row_groups {row_groups} do not cover leading "
+                             f"axis {x_int8.shape[0]}")
+        outs, off = [], 0
+        for rows, eff in row_groups:
+            outs.append(bitserial_matmul_pallas(
+                x_int8[off:off + rows], qw, eff_bits=eff,
+                interpret=interpret, bm=bm, bn=bn, bk=bk))
+            off += rows
+        return jnp.concatenate(outs, axis=0)
     interpret = (not _on_tpu()) if interpret is None else interpret
     eff = qw.w_bits if eff_bits is None else eff_bits
     if eff != qw.w_bits and not qw.msb_first:
@@ -258,13 +276,60 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
 
 
 def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
-           a_signed: Optional[bool] = None):
+           a_signed: Optional[bool] = None,
+           row_groups: Optional[tuple] = None, perm=None):
     """The framework's matmul: y = x @ w under a mixed-precision policy.
 
     x: f32/bf16 [..., K].  w: float [K, N] (dense / fake_quant) — for the
     integer backends pass ``qw`` (prepared planes); if absent it is derived
     from ``w`` on the fly (fine under jit: constant-folded for frozen weights).
+
+    ``row_groups`` (static tuple of ``(rows, LayerPrecision)``) is the
+    mixed-tier decode-batch path: the batch's rows, viewed through the
+    (traced) permutation ``perm`` (identity if None), form contiguous tier
+    groups; every group runs one plane-prefix GEMM at ITS w_bits with
+    activations quantized at ITS a_bits against the shared superplane store
+    ``qw``, and the per-group results are reassembled IN PERMUTED ORDER
+    (the caller inverts the permutation).  Activation quantization runs on
+    the full un-permuted batch — one pass per distinct (a_bits, a_signed) —
+    and only the integer codes and already-materialized scales are
+    gathered, so every row's codes AND scales are bitwise identical to a
+    tier-homogeneous dispatch (see :func:`_integer_matmul` for why that
+    matters).  ``row_groups`` must be static (it keys the jit trace);
+    ``prec`` is ignored when it is given.
     """
+    if row_groups is not None:
+        if qw is None:
+            raise ValueError("row_groups needs a prepared weight (qw)")
+        total = sum(r for r, _ in row_groups)
+        if total != x.shape[0]:
+            raise ValueError(f"row_groups cover {total} rows, x leading "
+                             f"axis is {x.shape[0]}")
+        if len(row_groups) == 1:
+            y = matmul(x, None, row_groups[0][1], qw=qw)
+            # Keep the contract: grouped results come back in PERMUTED
+            # order (gathering finished rows is exact).
+            return y if perm is None else jnp.take(y, perm, axis=0)
+        # One full-batch activation quantization per distinct a-config, on
+        # the UN-permuted x (bitwise identical to the homogeneous path).
+        quants = {}
+        for _, gprec in row_groups:
+            key = (gprec.a_bits, gprec.a_signed)
+            if key not in quants:
+                q, s = quantize_activations(x.astype(jnp.float32),
+                                            gprec.a_bits,
+                                            signed=gprec.a_signed)
+                if perm is not None:
+                    q = jnp.take(q, perm, axis=0)
+                    s = jnp.take(s, perm, axis=0)
+                quants[key] = (q, s)
+        outs, off = [], 0
+        for rows, gprec in row_groups:
+            x_q, x_s = quants[(gprec.a_bits, gprec.a_signed)]
+            sl = slice(off, off + rows)
+            outs.append(_dequant_gemm(x_q[sl], x_s[sl], qw, gprec, x.dtype))
+            off += rows
+        return jnp.concatenate(outs, axis=0)
     a_signed = prec.a_signed if a_signed is None else a_signed
     backend = prec.backend
 
@@ -286,18 +351,39 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
 
     if qw is None:
         qw = prepare_weight(w.astype(jnp.float32), prec)
+    return _integer_matmul(x, qw, prec, a_signed)
 
-    # Runtime precision: the effective width is the POLICY's w_bits, the
-    # stored width is the artifact's.  A superplane store serves any even
-    # effective width below its stored width via plane-prefix truncation.
+
+def _integer_matmul(x, qw: QuantizedWeight, prec: LayerPrecision, a_signed):
+    """Shared integer path: act-quant + plane-prefix GEMM + dequant.
+
+    Bitwise-stability note (the mixed-tier token-identity contract): the
+    grouped path in :func:`matmul` must produce EXACTLY these bits per row.
+    Integer codes and GEMMs are exact, but the activation scales are
+    continuous — if a group quantized a sliced or gathered sub-batch, XLA
+    would re-fuse the upstream normalization into that group's kernel and
+    its f32 reductions could round one ulp differently.  The grouped path
+    therefore quantizes the full un-permuted batch with this same graph and
+    only gathers the RESULTS."""
+    x_q, x_s = quantize_activations(x.astype(jnp.float32), prec.a_bits,
+                                    signed=a_signed)
+    return _dequant_gemm(x_q, x_s, qw, prec, x.dtype)
+
+
+def _dequant_gemm(x_q, x_s, qw: QuantizedWeight, prec: LayerPrecision,
+                  out_dtype):
+    """Plane-prefix GEMM on quantized activations + scale-out.
+
+    Runtime precision: the effective width is the POLICY's w_bits, the
+    stored width is the artifact's.  A superplane store serves any even
+    effective width below its stored width via plane-prefix truncation."""
+    backend = prec.backend
     eff_bits = min(prec.w_bits, qw.w_bits)
     if eff_bits != qw.w_bits and not qw.msb_first:
         raise ValueError(
             f"policy asks {eff_bits}b from a fixed {qw.w_bits}b weight; "
             "runtime truncation needs a superplane store "
             "(ops.prepare_superplane)")
-    x_q, x_s = quantize_activations(x.astype(jnp.float32), prec.a_bits,
-                                    signed=a_signed)
     if backend == "decomposed":
         planes = qw.get_planes()
         if qw.msb_first:
@@ -308,4 +394,4 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
     else:
         raise ValueError(f"unknown backend {backend!r}")
     w_s = qw.eff_scale(eff_bits) if eff_bits != qw.w_bits else qw.scale
-    return (acc.astype(jnp.float32) * x_s * w_s).astype(x.dtype)
+    return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)

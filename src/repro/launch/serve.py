@@ -7,10 +7,19 @@ reference engine for comparison).
         --w-bits 4 --kv-bits 8 --requests 8
 
 Runtime-reconfigurable tiers (one 8-bit superplane preload, per-request
-effective precision; requests round-robin over the tiers):
+effective precision; requests round-robin over the tiers and decode in
+MIXED-tier batches — one jitted step serves all tiers at once):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --tiers 8/8 4/4 2/2 --requests 9
+
+Per-request KV-cache precision (one kv value per tier, aligned with
+--tiers; bf16 / 8 / 4) and the tier-serialized admission baseline:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --kv-tiers bf16 8 4 --requests 9
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --serialize-tiers --requests 9
 """
 from __future__ import annotations
 
@@ -49,12 +58,20 @@ def main(argv=None):
                     help="runtime precision tiers, e.g. --tiers 8/8 4/4 2/2: "
                          "ONE superplane preload, requests round-robin over "
                          "the tiers (even w only; overrides --w/a-bits)")
+    ap.add_argument("--kv-tiers", nargs="+", default=None, metavar="KV",
+                    help="per-tier KV-cache precision aligned with --tiers "
+                         "(bf16, 8 or 4): ONE mixed per-slot KV arena, each "
+                         "request's slot stored at its tier's kv precision")
+    ap.add_argument("--serialize-tiers", action="store_true",
+                    help="tier-SERIALIZED admission (one tier per decode "
+                         "batch; PR-2 behaviour) instead of mixed-tier "
+                         "batches — the serve_mixed_tiers comparison "
+                         "baseline")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    model = LM(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+    # Flag validation BEFORE any model building (full-size configs take
+    # minutes to init; a bad flag combination must fail instantly).
     schedule = None
     if args.tiers:
         if args.backend == "dense":
@@ -62,13 +79,33 @@ def main(argv=None):
         if args.baseline:
             ap.error("--baseline has no per-request tier switching "
                      "(it pins one tier); drop --tiers")
+        kv_tiers = None
+        if args.kv_tiers:
+            if len(args.kv_tiers) != len(args.tiers):
+                ap.error("--kv-tiers must align 1:1 with --tiers")
+            if args.kv_bits is not None:
+                ap.error("--kv-bits conflicts with --kv-tiers; drop one")
+            try:
+                kv_tiers = {t: (None if kv in ("bf16", "none") else int(kv))
+                            for t, kv in zip(args.tiers, args.kv_tiers)}
+            except ValueError:
+                ap.error(f"--kv-tiers values must be bf16, 8 or 4, got "
+                         f"{args.kv_tiers}")
         schedule = uniform_schedule(
             {t: tuple(int(b) for b in t.split("/")) for t in args.tiers},
-            backend=args.backend)
+            backend=args.backend, kv_tiers=kv_tiers)
         policy = schedule.policy_for()
     else:
+        if args.kv_tiers:
+            ap.error("--kv-tiers needs --tiers")
+        if args.serialize_tiers:
+            ap.error("--serialize-tiers needs --tiers")
         policy = uniform_policy(args.w_bits, args.a_bits,
                                 backend=args.backend)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
     if args.backend != "dense":
         # Weight preload: planes prepared ONCE, before any request arrives.
         # With --tiers this is the 8-bit superplane store serving them all.
@@ -85,7 +122,8 @@ def main(argv=None):
     rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced,
                  schedule=schedule)
     cls = BatchServeEngine if args.baseline else ServeEngine
-    kw = {} if args.baseline else {"decode_chunk": args.decode_chunk}
+    kw = {} if args.baseline else {"decode_chunk": args.decode_chunk,
+                                   "mixed_tiers": not args.serialize_tiers}
     engine = cls(model, params, rt, max_batch=args.max_batch,
                  max_len=args.max_len, kv_bits=args.kv_bits, **kw)
 
@@ -109,7 +147,10 @@ def main(argv=None):
     if args.tiers:
         per = " ".join(f"{t}:{st.decode_steps_by_tier.get(t, 0)}"
                        for t in args.tiers)
-        print(f"tier decode_steps: {per} (switches={st.tier_switches})")
+        mode = "serialized" if args.serialize_tiers else "mixed"
+        print(f"tier decode_steps ({mode}): {per} "
+              f"(switches={st.tier_switches} "
+              f"mixed_chunks={st.mixed_tier_chunks})")
     return results
 
 

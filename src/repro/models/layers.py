@@ -24,9 +24,21 @@ class Runtime:
     """Per-call execution context threaded through the model.
 
     Precision comes from ONE of two sources: a fixed ``policy`` (prepare-time
-    precision, the classic path) or a ``schedule`` + ``tier`` pair (runtime-
-    reconfigurable serving: the engine switches ``tier`` per decode dispatch
-    via :meth:`for_tier` while the superplane weight store stays put)."""
+    precision, the classic path) or a ``schedule`` + tier information
+    (runtime-reconfigurable serving over one superplane weight store).  In
+    schedule mode there are again two shapes:
+
+    * ``tier`` — the whole batch runs at one named tier
+      (:meth:`for_tier`; the tier name is a JIT-STATIC argument of the
+      engine's dispatch functions);
+    * ``groups`` + ``perm``/``inv_perm`` — a mixed-tier decode batch
+      (:meth:`for_groups`): ``groups`` is a STATIC tuple of
+      ``(tier_name, rows)`` describing contiguous tier-sorted slot groups
+      (it keys the jit trace), while ``perm``/``inv_perm`` are TRACED
+      int32 [B] arrays mapping batch rows into/out of that sorted order
+      (they change per step without retracing).  Every projection then
+      runs one plane-prefix GEMM per group (see :func:`linear`).
+    """
 
     policy: PrecisionPolicy
     mode: str = "train"                 # train | serve
@@ -37,6 +49,9 @@ class Runtime:
     moe_dropless: bool = False
     schedule: Optional[PrecisionSchedule] = None
     tier: Optional[str] = None          # active tier name (schedule mode)
+    groups: Optional[tuple] = None      # STATIC ((tier_name, rows), ...)
+    perm: Optional[Any] = None          # TRACED int32 [B]: tier-sorted order
+    inv_perm: Optional[Any] = None      # TRACED int32 [B]: inverse of perm
 
     def prec(self, name: str) -> LayerPrecision:
         if self.schedule is not None:
@@ -47,7 +62,25 @@ class Runtime:
         """This runtime with the active tier swapped (no-op sans schedule)."""
         if self.schedule is None:
             return self
-        return dataclasses.replace(self, tier=tier)
+        return dataclasses.replace(self, tier=tier, groups=None, perm=None,
+                                   inv_perm=None)
+
+    def for_groups(self, groups, perm) -> "Runtime":
+        """This runtime serving a mixed-tier batch.
+
+        ``groups``: static tuple of ``(tier_name, rows)`` (tier-sorted,
+        contiguous, covering the batch).  ``perm``: traced int32 [B] with
+        ``perm[i]`` = the batch row that sorted position ``i`` reads from;
+        the inverse permutation is derived here (inside the trace)."""
+        if self.schedule is None:
+            raise ValueError("mixed-tier groups need a PrecisionSchedule")
+        return dataclasses.replace(self, tier=None, groups=tuple(groups),
+                                   perm=perm, inv_perm=jnp.argsort(perm))
+
+    @property
+    def group_batch(self) -> int:
+        """Total rows covered by ``groups`` (the slot-batch size)."""
+        return sum(n for _, n in self.groups)
 
 
 # ---------------------------------------------------------------- init utils
@@ -57,16 +90,49 @@ def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16):
                                     -scale, scale).astype(dtype)}
 
 
+def _serve_backend(prec: LayerPrecision) -> LayerPrecision:
+    """Prepared weights only run on the integer serving backends."""
+    return prec.with_backend(
+        prec.backend if prec.backend in ("decomposed", "pallas")
+        else "decomposed")
+
+
 def linear(params, x, rt: Runtime, name: str):
     """y = x @ w under the mixed-precision policy (w may be a prepared
-    QuantizedWeight for the serving path)."""
+    QuantizedWeight for the serving path).
+
+    Under a mixed-tier runtime (``rt.groups`` set) every prepared-weight
+    matmul takes the per-row-group path: gather batch rows into tier-sorted
+    order (``rt.perm``), run one plane-prefix GEMM per contiguous group at
+    that group's (w_bits, a_bits), and scatter back (``rt.inv_perm``).  The
+    leading axis of ``x`` must be the slot-batch axis — true for every
+    projection in the decode path (attention/MLP/SSM projections, per-expert
+    MoE FFNs after the per-sequence dispatch, and the LM head)."""
     w = params["w"]
-    prec = rt.prec(name)
     if isinstance(w, ops.QuantizedWeight):
-        return ops.matmul(x, None, prec.with_backend(
-            prec.backend if prec.backend in ("decomposed", "pallas")
-            else "decomposed"), qw=w)
-    y = ops.matmul(x, w, prec)
+        if rt.groups is not None:
+            if x.shape[0] != rt.group_batch:
+                raise ValueError(
+                    f"{name}: mixed-tier groups cover {rt.group_batch} slots "
+                    f"but x has leading axis {x.shape[0]} — grouped matmuls "
+                    "require the slot-batch axis to lead")
+            if len(rt.groups) == 1:       # homogeneous layout: no permuting
+                tier = rt.groups[0][0]
+                return ops.matmul(
+                    x, None, _serve_backend(rt.schedule.lookup(name, tier)),
+                    qw=w)
+            row_groups = tuple(
+                (n, _serve_backend(rt.schedule.lookup(name, t)))
+                for t, n in rt.groups)
+            # The permutation is applied INSIDE ops.matmul (to the already-
+            # quantized codes/scales, keeping scales bitwise stable); the
+            # grouped result comes back in sorted order and is scattered
+            # back to slot order here.
+            yg = ops.matmul(x, None, row_groups[0][1], qw=w,
+                            row_groups=row_groups, perm=rt.perm)
+            return jnp.take(yg, rt.inv_perm, axis=0)
+        return ops.matmul(x, None, _serve_backend(rt.prec(name)), qw=w)
+    y = ops.matmul(x, w, rt.prec(name))
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -173,51 +239,223 @@ def flash_attention(q, k, v, *, causal: bool = True, block_k: int = 1024,
 
 
 # ------------------------------------------------------------------ KV cache
+# Per-slot KV precision tiers: the decode-memory analogue of the weight
+# plane prefix.  A cache runs in one of four storage modes:
+#
+#   dense     bf16 [B, S, KVH, Dh]                  (kv_bits=None)
+#   int8      int8 codes + per-(pos, head) scales   (kv_bits=8)
+#   int4      uint8 nibble-packed codes + scales    (kv_bits=4)
+#   mixed     ONE uint8 byte-lane arena [B, S, KVH, L] serving bf16 / int8 /
+#             int4-packed lanes side by side, with a per-slot tier vector
+#             ``kv_bits`` int32 [B] (16 = bf16 passthrough, 8, 4) and shared
+#             per-(position, head) scale rows       (kv_bits=(16, 8, 4)-ish
+#             tuple of the modes the arena must serve)
+#
+# The mixed mode is what lets one slot arena serve requests whose
+# PrecisionSchedule tier maps to different KV precisions: a slot's lane
+# encodes exactly what the homogeneous cache at that kv_bits stores, so
+# per-request outputs are bit-identical to a fixed-precision engine.
+
+KV_TIER_BITS = (16, 8, 4)     # bf16 passthrough, int8, int4-packed
+
+
+def _kv_lane_bytes(bits: int, head_dim: int) -> int:
+    """Bytes per (position, head) lane one KV element row needs at a tier."""
+    return {16: 2 * head_dim, 8: head_dim, 4: head_dim // 2}[bits]
+
+
+def _kv_quant(x, bits: int, scale_dtype):
+    """Symmetric per-(position, head) KV quantization (int8 codes).
+
+    Wrapped in ``optimization_barrier``s: the scale is CONTINUOUS f32 math,
+    and if XLA fuses this subgraph differently per engine (the mixed
+    per-slot arena computes several candidate encodings and selects; a
+    homogeneous cache computes one), its rounding can drift by one ulp and
+    flip a quantization code — breaking the bit-identity between a mixed
+    slot and the fixed-precision reference engine at the same kv tier.  The
+    barriers pin this subgraph to one compilation in every context."""
+    x = jax.lax.optimization_barrier(x.astype(jnp.float32))
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return jax.lax.optimization_barrier(
+        (q.astype(jnp.int8), scale.astype(scale_dtype)))
+
+
+def _pack_int4(q):
+    """int8 codes in [-8, 7] [..., Dh] -> uint8 nibbles [..., Dh//2]
+    (element 2i in the low nibble, 2i+1 in the high nibble)."""
+    u = jax.lax.bitcast_convert_type(q, jnp.uint8)
+    return (u[..., 0::2] & 0xF) | ((u[..., 1::2] & 0xF) << 4)
+
+
+def _unpack_int4(b):
+    """Inverse of :func:`_pack_int4` (sign-extended int8 [..., Dh])."""
+    lo = (b & 0xF).astype(jnp.int32)
+    hi = ((b >> 4) & 0xF).astype(jnp.int32)
+    both = jnp.stack([lo, hi], axis=-1).reshape(*b.shape[:-1], -1)
+    return jnp.where(both >= 8, both - 16, both).astype(jnp.int8)
+
+
+def _bf16_to_bytes(x):
+    """bf16 [..., Dh] -> its bit pattern as uint8 [..., 2*Dh] (exact)."""
+    by = jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint8)
+    return by.reshape(*by.shape[:-2], -1)
+
+
+def _bytes_to_bf16(b):
+    """Inverse of :func:`_bf16_to_bytes`: uint8 [..., 2*Dh] -> bf16 [..., Dh]."""
+    u = b.reshape(*b.shape[:-1], -1, 2)
+    return jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+
+
 @dataclasses.dataclass
 class KVCache:
-    """Pre-allocated KV cache with PER-SLOT lengths; optionally stored
-    quantized (kv_bits=8) with per-(position, head) scales — the paper's
-    precision scaling applied to the decode memory bottleneck.
+    """Pre-allocated KV cache with PER-SLOT lengths and (optionally)
+    PER-SLOT precision tiers — the paper's precision scaling applied to the
+    decode memory bottleneck.
 
     The batch axis is a *slot* axis: every slot tracks its own fill point
-    (``length[b]``), so a continuous-batching engine can reset/refill one
-    slot while the others keep decoding against their caches."""
+    (``length[b]``) and, in mixed mode, its own storage tier
+    (``kv_bits[b]``), so a continuous-batching engine can reset/refill one
+    slot at a different KV precision while the others keep decoding against
+    their caches.  ``kv_bits`` and all array fields are traced data;
+    ``modes`` (which tiers the arena serves, descending) is static metadata
+    that keys the jit trace."""
 
-    k: jax.Array          # [B, Smax, KVH, Dh]  bf16 or int8
-    v: jax.Array
-    k_scale: Optional[jax.Array]   # f32 [B, Smax, KVH, 1] when quantized
+    k: jax.Array          # dense/int8: [B, Smax, KVH, Dh]; int4: [..., Dh//2]
+    v: jax.Array          # uint8; mixed: uint8 byte lanes [B, Smax, KVH, L]
+    k_scale: Optional[jax.Array]   # bf16 [B, Smax, KVH, 1] when quantized
     v_scale: Optional[jax.Array]
     length: jax.Array     # int32 [B] — filled positions per slot
+    kv_bits: Optional[jax.Array] = None   # int32 [B] per-slot tier (mixed)
+    modes: Optional[tuple] = None         # static tier set, descending
 
     @property
     def quantized(self) -> bool:
+        """Homogeneous int8 storage."""
         return self.k.dtype == jnp.int8
+
+    @property
+    def packed4(self) -> bool:
+        """Homogeneous int4 nibble-packed storage."""
+        return self.k.dtype == jnp.uint8 and self.kv_bits is None
+
+    @property
+    def mixed(self) -> bool:
+        """Per-slot tiered byte-lane arena."""
+        return self.kv_bits is not None
+
+    @property
+    def head_dim(self) -> int:
+        if self.mixed:
+            lanes = self.k.shape[-1]
+            return {16: lanes // 2, 8: lanes, 4: 2 * lanes}[self.modes[0]]
+        if self.packed4:
+            return 2 * self.k.shape[-1]
+        return self.k.shape[-1]
 
     @staticmethod
     def create(batch: int, max_len: int, kv_heads: int, head_dim: int,
-               dtype=jnp.bfloat16, kv_bits: Optional[int] = None) -> "KVCache":
-        shape = (batch, max_len, kv_heads, head_dim)
+               dtype=jnp.bfloat16, kv_bits=None) -> "KVCache":
+        """``kv_bits``: None (dense bf16), 8 (int8), 4 (int4-packed), or a
+        tuple of tier codes from ``KV_TIER_BITS`` for the mixed per-slot
+        arena (lanes sized for the widest tier; per-slot tiers start at the
+        widest and are set per admission)."""
         lengths = jnp.zeros((batch,), jnp.int32)
+        # Scales in bf16: per-(position, head) f32 scales would cost 50%
+        # overhead per device once head_dim is TP-sharded (§Perf decode).
+        s = jnp.ones((batch, max_len, kv_heads, 1), jnp.bfloat16)
+        if isinstance(kv_bits, (tuple, list)):
+            modes = tuple(sorted({int(m) for m in kv_bits}, reverse=True))
+            if not modes or any(m not in KV_TIER_BITS for m in modes):
+                raise ValueError(f"mixed kv tiers must be from "
+                                 f"{KV_TIER_BITS}, got {kv_bits}")
+            if head_dim % 2:
+                raise ValueError("per-slot KV tiers need an even head_dim")
+            lanes = max(_kv_lane_bytes(m, head_dim) for m in modes)
+            z = jnp.zeros((batch, max_len, kv_heads, lanes), jnp.uint8)
+            tiers = jnp.full((batch,), modes[0], jnp.int32)
+            return KVCache(z, z, s, s, lengths, kv_bits=tiers, modes=modes)
+        shape = (batch, max_len, kv_heads, head_dim)
         if kv_bits == 8:
             z8 = jnp.zeros(shape, jnp.int8)
-            # Scales in bf16: per-(position, head) f32 scales would cost 50%
-            # overhead per device once head_dim is TP-sharded (§Perf decode).
-            s = jnp.ones((batch, max_len, kv_heads, 1), jnp.bfloat16)
             return KVCache(z8, z8, s, s, lengths)
+        if kv_bits == 4:
+            if head_dim % 2:
+                raise ValueError("int4 KV packing needs an even head_dim")
+            z4 = jnp.zeros(shape[:-1] + (head_dim // 2,), jnp.uint8)
+            return KVCache(z4, z4, s, s, lengths)
+        if kv_bits is not None:
+            raise ValueError(f"kv_bits must be None, 8, 4 or a tier tuple, "
+                             f"got {kv_bits!r}")
         z = jnp.zeros(shape, dtype)
         return KVCache(z, z, None, None, lengths)
 
-    def _quant(self, x):
-        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-        scale = jnp.maximum(amax, 1e-8) / 127.0
-        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127)
-        return q.astype(jnp.int8), scale.astype(self.k_scale.dtype)
+    # ------------------------------------------------- mixed-mode encoding
+    def _slot_select(self, per_mode, ndim):
+        """Select each slot's candidate by its ``kv_bits`` tier code."""
+        kv = self.kv_bits.reshape((-1,) + (1,) * (ndim - 1))
+        out = per_mode[-1]
+        for m, cand in zip(self.modes[:-1], per_mode[:-1]):
+            out = jnp.where(kv == m, cand, out)
+        return out
 
+    def _encode_mixed(self, x):
+        """float [..., Dh] -> (byte lanes [..., L], scale [..., 1]) with
+        every slot encoded at its own tier (bit-identical to the
+        homogeneous cache at that tier)."""
+        lanes = self.k.shape[-1]
+        bys, scs = [], []
+        for m in self.modes:
+            if m == 16:
+                by = _bf16_to_bytes(x)
+                sc = jnp.ones(x.shape[:-1] + (1,), self.k_scale.dtype)
+            else:
+                q, sc = _kv_quant(x, m, self.k_scale.dtype)
+                by = jax.lax.bitcast_convert_type(q, jnp.uint8) if m == 8 \
+                    else _pack_int4(q)
+            pad = lanes - by.shape[-1]
+            if pad:
+                by = jnp.pad(by, [(0, 0)] * (by.ndim - 1) + [(0, pad)])
+            bys.append(by)
+            scs.append(sc)
+        return (self._slot_select(bys, x.ndim),
+                self._slot_select(scs, x.ndim))
+
+    def _decode_mixed(self, buf, scale, dtype):
+        """byte lanes [..., L] -> dequantized [..., Dh] per slot tier."""
+        dh = self.head_dim
+        cands = []
+        for m in self.modes:
+            if m == 16:
+                cands.append(_bytes_to_bf16(buf[..., :2 * dh]).astype(dtype))
+            elif m == 8:
+                q = jax.lax.bitcast_convert_type(buf[..., :dh], jnp.int8)
+                cands.append(q.astype(dtype) * scale.astype(dtype))
+            else:
+                q = _unpack_int4(buf[..., :dh // 2])
+                cands.append(q.astype(dtype) * scale.astype(dtype))
+        return self._slot_select(cands, cands[0].ndim)
+
+    # --------------------------------------------------------------- writes
     def _lengths_after(self, start, s, new_length):
         if new_length is None:
             return jnp.zeros_like(self.length) + start + s
         return jnp.broadcast_to(new_length, self.length.shape).astype(
             self.length.dtype)
+
+    def _encode(self, x):
+        """float K or V rows -> (storage, scale-or-None) for this mode."""
+        if self.mixed:
+            return self._encode_mixed(x)
+        if self.quantized:
+            return _kv_quant(x, 8, self.k_scale.dtype)
+        if self.packed4:
+            q, sc = _kv_quant(x, 4, self.k_scale.dtype)
+            return _pack_int4(q), sc
+        return x.astype(self.k.dtype), None
 
     def update(self, k_new, v_new, start, *, new_length=None) -> "KVCache":
         """Insert [B, S_new, KVH, Dh] at position `start` (scalar, traced ok).
@@ -228,19 +466,17 @@ class KVCache:
         ``b`` are real tokens."""
         idx = (0, start, 0, 0)
         ln = self._lengths_after(start, k_new.shape[1], new_length)
-        if self.quantized:
-            kq, ks = self._quant(k_new)
-            vq, vs = self._quant(v_new)
-            return KVCache(
-                jax.lax.dynamic_update_slice(self.k, kq, idx),
-                jax.lax.dynamic_update_slice(self.v, vq, idx),
-                jax.lax.dynamic_update_slice(self.k_scale, ks, idx),
-                jax.lax.dynamic_update_slice(self.v_scale, vs, idx),
-                ln)
-        return KVCache(
-            jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), idx),
-            jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), idx),
-            None, None, ln)
+        kq, ks = self._encode(k_new)
+        vq, vs = self._encode(v_new)
+        k = jax.lax.dynamic_update_slice(self.k, kq, idx)
+        v = jax.lax.dynamic_update_slice(self.v, vq, idx)
+        if ks is None:
+            return dataclasses.replace(self, k=k, v=v, length=ln)
+        return dataclasses.replace(
+            self, k=k, v=v,
+            k_scale=jax.lax.dynamic_update_slice(self.k_scale, ks, idx),
+            v_scale=jax.lax.dynamic_update_slice(self.v_scale, vs, idx),
+            length=ln)
 
     def append(self, k_new, v_new, active=None) -> "KVCache":
         """Masked per-slot decode write: one token per slot at that slot's
@@ -262,26 +498,44 @@ class KVCache:
             return buf.at[idx, pos].set(val)
 
         ln = self.length + active.astype(self.length.dtype)
-        if self.quantized:
-            kq, ks = self._quant(k_new)
-            vq, vs = self._quant(v_new)
-            return KVCache(put(self.k, kq[:, 0]), put(self.v, vq[:, 0]),
-                           put(self.k_scale, ks[:, 0]),
-                           put(self.v_scale, vs[:, 0]), ln)
-        return KVCache(put(self.k, k_new[:, 0]), put(self.v, v_new[:, 0]),
-                       None, None, ln)
+        kq, ks = self._encode(k_new)
+        vq, vs = self._encode(v_new)
+        k, v = put(self.k, kq[:, 0]), put(self.v, vq[:, 0])
+        if ks is None:
+            return dataclasses.replace(self, k=k, v=v, length=ln)
+        return dataclasses.replace(
+            self, k=k, v=v, k_scale=put(self.k_scale, ks[:, 0]),
+            v_scale=put(self.v_scale, vs[:, 0]), length=ln)
 
     def read(self, dtype=jnp.bfloat16):
+        """Dequantized (K, V) views of the whole arena.
+
+        Quantized modes return their result through an
+        ``optimization_barrier``: the dequant multiply feeds attention
+        contractions, and XLA may otherwise fold the per-row scale out of
+        the f32 sum (``sum(q*s*x) -> s*sum(q*x)``) in one engine's graph
+        but not another's — a one-ulp reassociation that breaks mixed-vs-
+        fixed-precision bit-identity.  Dense bf16 reads have no continuous
+        scale and stay unbarriered."""
+        if self.mixed:
+            return jax.lax.optimization_barrier(
+                (self._decode_mixed(self.k, self.k_scale, dtype),
+                 self._decode_mixed(self.v, self.v_scale, dtype)))
         if self.quantized:
             k = self.k.astype(dtype) * self.k_scale.astype(dtype)
             v = self.v.astype(dtype) * self.v_scale.astype(dtype)
-            return k, v
+            return jax.lax.optimization_barrier((k, v))
+        if self.packed4:
+            k = _unpack_int4(self.k).astype(dtype) * self.k_scale.astype(dtype)
+            v = _unpack_int4(self.v).astype(dtype) * self.v_scale.astype(dtype)
+            return jax.lax.optimization_barrier((k, v))
         return self.k.astype(dtype), self.v.astype(dtype)
 
 
 jax.tree_util.register_dataclass(
-    KVCache, data_fields=["k", "v", "k_scale", "v_scale", "length"],
-    meta_fields=[])
+    KVCache, data_fields=["k", "v", "k_scale", "v_scale", "length",
+                          "kv_bits"],
+    meta_fields=["modes"])
 
 
 def decode_attention(q, cache: KVCache):

@@ -145,8 +145,12 @@ class LM:
         x, aux, _ = self._stack(params, x, rt)
         return self._head(params, x, rt), aux
 
-    def init_cache(self, batch: int, max_len: int, kv_bits: Optional[int] = None):
-        """Per-period stacked caches for every cache-bearing position."""
+    def init_cache(self, batch: int, max_len: int, kv_bits=None):
+        """Per-period stacked caches for every cache-bearing position.
+
+        ``kv_bits``: None (bf16), 8 (int8), 4 (int4-packed), or a tuple of
+        tier codes (e.g. ``(16, 8, 4)``) for the per-slot mixed KV arena —
+        see :meth:`repro.models.layers.KVCache.create`."""
         cfg = self.cfg
         single: Dict[str, Any] = {}
         for i, (mixer, _) in enumerate(self.pattern):

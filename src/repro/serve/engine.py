@@ -9,11 +9,24 @@ through.  The engine mirrors that end to end:
   prepared pytree is the engine's only weight representation.
 * **Runtime precision tiers** — with a ``PrecisionSchedule`` on the
   Runtime, the preload is a single 8-bit MSB-first *superplane* store and
-  every decode dispatch picks an effective (w_bits, a_bits) tier by
-  plane-prefix truncation: requests carry a tier, the scheduler groups
-  compatible tiers into a decode batch, and switching tiers costs zero
-  weight re-preparation (``PREPARE_CALLS`` counts preparations — it must
-  not move after construction).
+  every decode dispatch picks effective (w_bits, a_bits) tiers by
+  plane-prefix truncation.  Switching tiers costs zero weight
+  re-preparation (``PREPARE_CALLS`` counts preparations — it must not move
+  after construction).
+* **Mixed-tier decode batches** — slots are tier-tagged: admission fills
+  ANY free slot (plain FIFO), and each decode chunk derives a per-step
+  group layout from the occupied slots' tiers — a jit-STATIC tuple of
+  ``(tier, rows)`` sorted by tier, plus a TRACED permutation mapping batch
+  rows into that order.  Every projection then runs one plane-prefix GEMM
+  per group, so one jitted decode step serves slots at 8/6/4/2 bits
+  simultaneously (see ``models.layers.linear``).  ``mixed_tiers=False``
+  keeps the PR-2 tier-serialized admission (one tier per decode batch) as
+  the comparison baseline.
+* **Per-request KV precision** — a schedule with ``kv_tiers`` allocates one
+  mixed per-slot KV arena: each admitted request's slot stores K/V at its
+  tier's precision (bf16 / int8 / int4-packed lanes, per-slot scale rows),
+  so a low tier shrinks its decode-memory footprint along with its
+  weight-plane reads.
 * **Persistent decode state** — a fixed-slot cache arena
   (:mod:`repro.serve.slots`): per-slot KV lengths and SSM states live in one
   pre-allocated pytree across the whole request stream.
@@ -28,6 +41,12 @@ A slot stops consuming decode work the step its budget is exhausted (the
 active mask), unlike batch-at-a-time scheduling where every slot decodes
 until the batch-wide max (see :class:`BatchServeEngine`, kept as the
 reference baseline).
+
+Jit-static vs traced (the contract everything above hangs on): tier names,
+group layouts, chunk lengths and prompt buckets are STATIC (they key
+traces: at most |layouts| x decode_chunk decode entries); slot indices,
+token ids, budgets, the group permutation and per-slot KV tier codes are
+TRACED (they change every step without retracing).
 """
 from __future__ import annotations
 
@@ -44,7 +63,7 @@ from repro.models.layers import Runtime
 from repro.models.transformer import LM
 from repro.serve import slots as slots_lib
 from repro.serve.request import Request
-from repro.serve.scheduler import ANY_TIER, Scheduler
+from repro.serve.scheduler import Scheduler
 
 __all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
            "prepare_params", "PREPARE_CALLS"]
@@ -52,7 +71,7 @@ __all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
 # Global weight-preparation counter: every prepare_params call (one quantize+
 # decompose sweep over the params) bumps it.  The runtime-tier contract —
 # zero re-preparation after engine construction — is asserted against this
-# in tests and the serve_precision_tiers benchmark.
+# in tests and the serve_precision_tiers / serve_mixed_tiers benchmarks.
 PREPARE_CALLS = 0
 
 
@@ -142,7 +161,14 @@ def _ensure_prepared(params, rt: Runtime, model: LM, packed: bool):
 
 @dataclasses.dataclass
 class EngineStats:
-    """Work accounting (the utilization story of the refactor)."""
+    """Work accounting (the utilization story of the refactor).
+
+    Tier accounting under mixed-tier batches: a decode step that serves
+    several tiers at once counts its ``n_steps`` toward EVERY tier with an
+    occupied slot (``decode_steps_by_tier``), while ``tokens_by_tier``
+    counts only each tier's own active slot-steps.  ``tier_switches`` only
+    moves in tier-serialized mode (mixed batches never switch);
+    ``mixed_tier_chunks`` counts dispatches whose batch held >= 2 tiers."""
 
     prefills: int = 0
     prefill_tokens: int = 0        # real (unpadded) prompt tokens prefilled
@@ -150,7 +176,8 @@ class EngineStats:
     decode_chunks: int = 0         # jitted multi-step calls dispatched
     decode_slot_steps: int = 0     # sum over steps of active slots (useful)
     decode_idle_slot_steps: int = 0  # masked-out slot-steps (waste bound)
-    tier_switches: int = 0         # decode-phase precision changes
+    tier_switches: int = 0         # decode-phase precision changes (serialized)
+    mixed_tier_chunks: int = 0     # chunks serving >= 2 tiers in one batch
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -163,12 +190,29 @@ class ServeEngine:
     freed slots are re-prefilled individually against the shared cache
     arena while the other slots' caches stay untouched, and the decode
     inner loop is a single jitted multi-step scan (``decode_chunk`` steps
-    per dispatch) with per-slot active masking."""
+    per dispatch) with per-slot active masking.
+
+    With a ``PrecisionSchedule`` on the runtime, ``mixed_tiers`` selects the
+    admission policy:
+
+    * ``True`` (default) — tier-tagged slots: any free slot takes the FIFO
+      head regardless of tier, and each decode chunk runs the occupied
+      tiers TOGETHER via the per-row-group matmul path (a static
+      ``(tier, rows)`` layout + a traced slot permutation, derived from
+      ``SlotArena.tiers`` each step).
+    * ``False`` — the tier-serialized baseline: a decode batch runs at ONE
+      tier and admission is restricted to matching requests (kept for the
+      ``serve_mixed_tiers`` benchmark comparison).
+
+    Constructor args that select jit behaviour (``decode_chunk``,
+    ``prompt_bucket``, ``packed``, the schedule's tier/kv-mode sets) are
+    static; everything that varies per request flows through traced
+    arrays."""
 
     def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
                  max_len: int = 512, kv_bits: Optional[int] = None,
                  decode_chunk: int = 8, prompt_bucket: int = 8,
-                 packed: bool = False):
+                 packed: bool = False, mixed_tiers: bool = True):
         self.model = model
         self.rt = rt
         self.max_batch = max_batch
@@ -176,6 +220,7 @@ class ServeEngine:
         self.kv_bits = kv_bits
         self.decode_chunk = max(1, decode_chunk)
         self.prompt_bucket = max(1, prompt_bucket)
+        self.mixed_tiers = mixed_tiers
         # Weight preload: the prepared plane pytree is the engine's ONLY
         # weight representation (prepared here unless already prepared).
         # With a PrecisionSchedule this is the 8-bit superplane store; every
@@ -183,27 +228,45 @@ class ServeEngine:
         self.params, self.quantized_paths = _ensure_prepared(
             params, rt, model, packed)
         self.schedule = rt.schedule
-        # The tier the decode batch currently runs at (schedule mode only):
-        # admission is restricted to this tier while any slot is occupied.
+        # Tier-serialized mode only: the tier the decode batch currently
+        # runs at; admission is restricted to it while any slot is occupied.
         self._active_tier: Optional[str] = None
         self._last_tier: Optional[str] = None
 
+        # KV arena mode: a schedule with kv_tiers gets the mixed per-slot
+        # arena (one byte-lane store serving every declared KV precision);
+        # otherwise the engine-wide kv_bits applies to all slots.
+        arena_kv = kv_bits
+        self._mixed_kv = False
+        if self.schedule is not None and self.schedule.kv_tiers is not None:
+            if kv_bits is not None:
+                raise ValueError(
+                    "kv_bits conflicts with the schedule's kv_tiers (per-"
+                    "request KV precision); drop one of the two")
+            arena_kv = self.schedule.kv_modes
+            self._mixed_kv = True
         self.arena = slots_lib.SlotArena(model, max_batch, max_len,
-                                         kv_bits=kv_bits)
+                                         kv_bits=arena_kv)
         self.scheduler = Scheduler(max_batch)
         self.stats = EngineStats()
         self._seen_uids: set = set()
         # Host-mirrored per-slot decode state.
         self._tok = np.zeros((max_batch,), np.int32)
         self._remaining = np.zeros((max_batch,), np.int32)
+        mixed_kv = self._mixed_kv
 
-        def prefill_slot(params, caches, slot, tokens, length, tier=None):
+        def prefill_slot(params, caches, slot, tokens, length, kv_code,
+                         tier=None):
             """Admit one request: reset slot, prefill its prompt (right-
             padded to a bucket), write the batch-1 cache back into the
-            arena.  Retraces only per (prompt bucket x tier)."""
+            arena.  ``tier`` is STATIC (retraces only per prompt bucket x
+            tier); ``slot``, ``tokens``, ``length`` and ``kv_code`` (the
+            slot's KV tier, 16/8/4) are traced."""
             rt_eff = self.rt.for_tier(tier)
             sub = slots_lib.slot_view(caches, slot)
             sub = jax.tree.map(jnp.zeros_like, sub)     # per-slot reset
+            if mixed_kv:
+                sub = slots_lib.fill_kv_tier(sub, kv_code)
             logits, sub = self.model.prefill(
                 params, rt_eff, sub, tokens=tokens,
                 seq_lengths=length.reshape(1))
@@ -211,16 +274,24 @@ class ServeEngine:
             tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
             return tok, caches
 
-        def decode_chunk_fn(params, caches, tok, remaining, n_steps,
-                            tier=None):
+        def decode_chunk_fn(params, caches, tok, remaining, perm, n_steps,
+                            tier=None, groups=None):
             """The single jitted inner loop: ``n_steps`` decode steps as one
             lax.scan with an active mask.  A slot's budget hitting zero
             freezes its cache (masked writes) THAT step; its lane still
             flows through the matmuls (dense batch) but produces no state
-            change and no emitted token.  ``tier`` (static) selects the
-            effective precision: the same weight store, a different plane
-            prefix / activation depth — at most tiers x decode_chunk traces."""
-            rt_eff = self.rt.for_tier(tier)
+            change and no emitted token.
+
+            Precision selection — both STATIC (they key the trace):
+            ``groups`` (mixed-tier mode) is the ``(tier, rows)`` layout of
+            the tier-sorted batch, served in ONE step via per-row-group
+            plane-prefix GEMMs; ``tier`` (serialized mode) runs the whole
+            batch at one tier.  ``perm`` (traced) maps batch rows into the
+            sorted group order and changes per chunk without retracing."""
+            if groups is not None:
+                rt_eff = self.rt.for_groups(groups, perm)
+            else:
+                rt_eff = self.rt.for_tier(tier)
 
             def step(carry, _):
                 tok, caches, remaining = carry
@@ -240,10 +311,15 @@ class ServeEngine:
         self._prefill_slot = jax.jit(prefill_slot,
                                      static_argnames=("tier",))
         self._decode_chunk = jax.jit(decode_chunk_fn,
-                                     static_argnames=("n_steps", "tier"))
+                                     static_argnames=("n_steps", "tier",
+                                                      "groups"))
 
     # ----------------------------------------------------------------- intake
     def submit(self, request: Request) -> None:
+        """Queue one request (host-side; validates against engine limits).
+
+        On a tiered engine the queued copy always carries a concrete tier
+        name (the schedule's default when the caller left it None)."""
         plen = len(request.prompt)
         if plen == 0:
             raise ValueError(f"request {request.uid}: empty prompt")
@@ -285,8 +361,11 @@ class ServeEngine:
         return padded, plen
 
     def _admit_free_slots(self) -> None:
+        """Fill free slots from the waiting queue and prefill each admitted
+        request individually (mixed-tier mode: plain FIFO into ANY slot;
+        serialized mode: only requests matching the active tier)."""
         for slot in self.scheduler.free_slots():
-            if self.schedule is None:
+            if self.schedule is None or self.mixed_tiers:
                 req = self.scheduler.admit(slot)
             else:
                 if self._active_tier is None:
@@ -302,9 +381,13 @@ class ServeEngine:
             if req is None:
                 break
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
+            kv_code = self.schedule.kv_code_for(req.tier) \
+                if self._mixed_kv else 0
             tok, self.arena.caches = self._prefill_slot(
                 self.params, self.arena.caches, jnp.int32(slot),
-                jnp.asarray(padded), jnp.int32(plen), tier=req.tier)
+                jnp.asarray(padded), jnp.int32(plen), jnp.int32(kv_code),
+                tier=req.tier)
+            self.arena.tiers[slot] = req.tier
             self.stats.prefills += 1
             self.stats.prefill_tokens += plen
             first = int(tok)
@@ -313,17 +396,49 @@ class ServeEngine:
             self._tok[slot] = first
             self._remaining[slot] = state.remaining
 
+    def _release_done(self) -> None:
+        """Release exhausted slots and clear their arena tier tags."""
+        for slot in self.scheduler.release_done():
+            self.arena.tiers[slot] = None
+
+    def _group_layout(self):
+        """Derive the per-step mixed-tier layout from the slot tier tags.
+
+        Returns ``(groups, perm)``: ``groups`` is the jit-STATIC tuple of
+        ``(tier, rows)`` in schedule tier order (free slots ride along in
+        the default tier's group — their lanes are masked anyway), ``perm``
+        the TRACED int32 [B] slot order realizing it.  The jit key space is
+        the set of tier multisets over ``max_batch`` slots, not the set of
+        slot assignments."""
+        rank = {t: i for i, t in enumerate(self.schedule.tier_names)}
+        default = self.schedule.default_tier
+        slot_tiers = [t if t is not None else default
+                      for t in self.arena.tiers]
+        order = sorted(range(self.max_batch),
+                       key=lambda s: (rank[slot_tiers[s]], s))
+        groups: List[List[Any]] = []
+        for s in order:
+            t = slot_tiers[s]
+            if groups and groups[-1][0] == t:
+                groups[-1][1] += 1
+            else:
+                groups.append([t, 1])
+        return (tuple((t, n) for t, n in groups),
+                np.asarray(order, np.int32))
+
     # ------------------------------------------------------------------- run
     def step(self) -> None:
         """One scheduling round: admit into free slots, then run one jitted
-        decode chunk (at the active precision tier, if tiered) and account
-        its tokens."""
-        if not self.scheduler.occupied():
-            if self._active_tier is not None:     # keep across idle steps
-                self._last_tier = self._active_tier
-            self._active_tier = None              # batch drained: re-tier
+        decode chunk (serving the occupied slots' tiers together in mixed
+        mode, or the single active tier in serialized mode) and account its
+        tokens."""
+        if self.schedule is not None and not self.mixed_tiers:
+            if not self.scheduler.occupied():
+                if self._active_tier is not None:  # keep across idle steps
+                    self._last_tier = self._active_tier
+                self._active_tier = None           # batch drained: re-tier
         self._admit_free_slots()
-        self.scheduler.release_done()             # max_new_tokens == 1 cases
+        self._release_done()                       # max_new_tokens == 1 cases
         occupied = self.scheduler.occupied()
         if not occupied:
             return
@@ -331,11 +446,18 @@ class ServeEngine:
         # (keyed per distinct length: at most decode_chunk jit entries).
         n_steps = int(min(self.decode_chunk,
                           max(s.remaining for _, s in occupied)))
+        if self.schedule is not None and self.mixed_tiers:
+            groups, perm = self._group_layout()
+            tier = None
+        else:
+            groups, perm = None, np.zeros((self.max_batch,), np.int32)
+            tier = self._active_tier
         (self.arena.caches, tok, remaining, toks, actives) = \
             self._decode_chunk(self.params, self.arena.caches,
                                jnp.asarray(self._tok),
-                               jnp.asarray(self._remaining), n_steps=n_steps,
-                               tier=self._active_tier)
+                               jnp.asarray(self._remaining),
+                               jnp.asarray(perm), n_steps=n_steps,
+                               tier=tier, groups=groups)
         self._tok = np.array(tok)            # copies: host arrays stay writable
         self._remaining = np.array(remaining)
         toks = np.asarray(toks)                   # [n_steps, B]
@@ -344,18 +466,23 @@ class ServeEngine:
         self.stats.decode_steps += n_steps
         self.stats.decode_slot_steps += int(actives.sum())
         self.stats.decode_idle_slot_steps += int((~actives).sum())
-        if self._active_tier is not None:
-            by_tier = self.stats.decode_steps_by_tier
-            by_tier[self._active_tier] = \
-                by_tier.get(self._active_tier, 0) + n_steps
+        if self.schedule is not None:
+            occupied_tiers = {self.arena.tiers[slot]
+                              for slot, _ in occupied} if self.mixed_tiers \
+                else {tier}
+            self.stats.mixed_tier_chunks += len(occupied_tiers) > 1
+            for t in occupied_tiers:
+                by_tier = self.stats.decode_steps_by_tier
+                by_tier[t] = by_tier.get(t, 0) + n_steps
             tk = self.stats.tokens_by_tier
-            tk[self._active_tier] = \
-                tk.get(self._active_tier, 0) + int(actives.sum())
+            for slot, _ in occupied:
+                t = self.arena.tiers[slot] if self.mixed_tiers else tier
+                tk[t] = tk.get(t, 0) + int(actives[:, slot].sum())
         for slot, state in occupied:
             for s in range(n_steps):
                 if actives[s, slot]:
                     state.emit(int(toks[s, slot]))
-        self.scheduler.release_done()
+        self._release_done()
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve a request list to completion (streaming entrypoint:
@@ -380,7 +507,14 @@ class BatchServeEngine:
     Kept for parity tests and benchmarks: its outputs are exact per request
     (right-padded prefill with per-row true lengths), but finished slots
     keep burning decode steps until the batch max — the waste the
-    continuous-batching engine eliminates."""
+    continuous-batching engine eliminates.
+
+    On a tiered runtime the baseline runs EVERY request at ONE fixed tier
+    (``tier`` pins it; the schedule's default otherwise) — it has no
+    per-request switching.  Its KV cache follows that tier's ``kv_tiers``
+    precision when the schedule declares one (and ``kv_bits`` was left
+    None), which makes it the fixed-precision reference for the mixed
+    per-slot KV arena."""
 
     def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
                  max_len: int = 512, kv_bits: Optional[int] = None,
@@ -390,9 +524,10 @@ class BatchServeEngine:
                 and tier not in rt.schedule.tiers:
             raise ValueError(f"unknown tier {tier!r}; engine serves "
                              f"{sorted(rt.schedule.tiers)}")
-        # The baseline runs EVERY request at one fixed tier (it has no
-        # per-request switching); ``tier`` pins it, default tier otherwise.
-        rt = rt.for_tier(tier) if rt.schedule is not None else rt
+        if rt.schedule is not None:
+            if kv_bits is None:
+                kv_bits = rt.schedule.kv_bits_for(tier)
+            rt = rt.for_tier(tier)
         self.rt = rt
         self.params, _ = _ensure_prepared(params, rt, model, packed)
         self.max_batch = max_batch
@@ -406,6 +541,7 @@ class BatchServeEngine:
             lambda p, c, t: model.decode_step(p, rt, c, tokens=t))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve the list batch-at-a-time; returns {uid: tokens}."""
         for r in requests:   # same admission contract as ServeEngine.submit
             if len(r.prompt) == 0:
                 raise ValueError(f"request {r.uid}: empty prompt")

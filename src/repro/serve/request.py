@@ -8,11 +8,18 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One generation request (pure host data — never traced itself; the
+    engine moves its prompt/budget into traced arrays at admission).
+
+    ``tier`` names the precision tier on engines with a
+    ``PrecisionSchedule`` (None = the schedule's default tier; must stay
+    None on untiered engines).  The engine normalizes it onto a queued copy
+    at submit time, and the tier drives BOTH the slot's weight plane-prefix
+    width and — when the schedule declares ``kv_tiers`` — the slot's
+    KV-cache storage precision."""
+
     uid: int
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16     # total tokens returned (>= 1; results come
                                  # from ServeEngine.run / .results)
-    tier: str = None             # precision tier name (engines with a
-                                 # PrecisionSchedule; None = default tier /
-                                 # no tiering.  The engine normalizes this
-                                 # at submit time.)
+    tier: str = None             # precision tier name (see class docstring)

@@ -1,15 +1,18 @@
 """Host-side admission scheduler for slot-based continuous batching.
 
-Pure bookkeeping, no JAX: a FIFO waiting queue plus per-slot state (which
-request occupies the slot, tokens emitted so far, decode budget remaining).
-The engine asks for free slots after every decode chunk and admits waiting
-requests into them — occupied slots are never re-prefilled.
+Pure bookkeeping, no JAX (everything here is host state; nothing is traced):
+a FIFO waiting queue plus per-slot state (which request occupies the slot,
+tokens emitted so far, decode budget remaining).  The engine asks for free
+slots after every decode chunk and admits waiting requests into them —
+occupied slots are never re-prefilled.
 
-Precision-tiered serving (``Request.tier``): a decode batch runs at ONE
-effective precision, so admission can be constrained to requests whose tier
-matches the currently decoding one (``admit(slot, tier=...)``) — FIFO within
-a tier, tier-grouping across tiers.  Untiered engines pass no constraint and
-keep strict FIFO.
+Precision-tiered serving (``Request.tier``): the default engine admits
+MIXED tiers — any free slot takes the FIFO head and the decode batch serves
+the occupied tiers together via per-row-group matmuls, so admission here is
+plain ``admit(slot)``.  The tier-constrained form (``admit(slot, tier=...)``
+— FIFO within a tier, requests of other tiers keep their queue position) is
+what the tier-SERIALIZED baseline mode uses, where a decode batch runs at
+one precision at a time.
 """
 from __future__ import annotations
 
@@ -22,7 +25,8 @@ from repro.serve.request import Request
 
 @dataclasses.dataclass
 class SlotState:
-    """One occupied decode slot."""
+    """One occupied decode slot (host bookkeeping: the request, its emitted
+    tokens, and the decode budget still owed)."""
 
     request: Request
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -45,8 +49,11 @@ ANY_TIER = object()   # admit() sentinel: no tier constraint (strict FIFO)
 
 
 class Scheduler:
-    """FIFO admission over a fixed number of slots (tier-grouped when the
-    engine serves precision tiers)."""
+    """FIFO admission over a fixed number of slots.
+
+    Tier-agnostic by default (mixed-tier engines fill any slot from the
+    FIFO head); ``admit(slot, tier=...)`` restricts admission to one tier
+    for the serialized baseline."""
 
     def __init__(self, num_slots: int):
         self.num_slots = num_slots
@@ -56,9 +63,11 @@ class Scheduler:
 
     # -------------------------------------------------------------- queueing
     def submit(self, request: Request) -> None:
+        """Append to the FIFO waiting queue."""
         self.waiting.append(request)
 
     def free_slots(self) -> List[int]:
+        """Indices of currently unoccupied slots."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def next_tier(self) -> Optional[str]:
@@ -93,6 +102,7 @@ class Scheduler:
 
     # ------------------------------------------------------------- lifecycle
     def occupied(self) -> List[Tuple[int, SlotState]]:
+        """(slot index, state) for every occupied slot."""
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
 
     def release(self, slot: int) -> SlotState:
@@ -115,4 +125,5 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
+        """True while anything waits or decodes."""
         return bool(self.waiting) or any(s is not None for s in self.slots)

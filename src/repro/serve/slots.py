@@ -4,16 +4,26 @@ The model's cache pytree (``LM.init_cache``) stacks every leaf as
 ``[n_periods, B, ...]``: axis 1 is the slot axis.  This module provides the
 slot-granular views the engine needs — extract one slot as a batch-1 cache,
 write a batch-1 cache back into its slot, reset a slot — all as pure
-functions usable under ``jax.jit`` with a traced slot index, so admitting a
+functions usable under ``jax.jit`` with a TRACED slot index, so admitting a
 request into slot ``i`` never touches any other slot's K/V rows, lengths,
 or SSM state.
+
+Besides the device-side cache pytree the arena keeps a host-side per-slot
+**tier vector** (``SlotArena.tiers``): which precision tier currently
+occupies each slot.  The engine derives the per-step mixed-tier group
+layout (a jit-static tuple) from it, while the matching per-slot KV
+precision lives ON DEVICE as traced data (``KVCache.kv_bits``, set at
+admission via :func:`fill_kv_tier`).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import dataclasses
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.models.layers import KVCache
 
 SLOT_AXIS = 1   # cache leaves are [n_periods, B, ...]
 
@@ -41,15 +51,38 @@ def slot_reset(caches, slot):
     return slot_write(caches, zero, slot)
 
 
+def fill_kv_tier(caches, code):
+    """Set every mixed-mode KVCache's per-slot tier lane(s) to ``code``.
+
+    ``code`` is a (traced-ok) int32 tier code (16 = bf16, 8, 4).  Applied to
+    a batch-1 slot view right before prefill, then written back with the
+    rest of the slot state, so the admitted request's K/V rows quantize at
+    ITS tier from the first prefill write on.  No-op for caches without
+    per-slot tiers (SSM caches, homogeneous KV modes)."""
+    def one(c):
+        if isinstance(c, KVCache) and c.kv_bits is not None:
+            return dataclasses.replace(
+                c, kv_bits=jnp.zeros_like(c.kv_bits) + code)
+        return c
+    return jax.tree.map(one, caches,
+                        is_leaf=lambda c: isinstance(c, KVCache))
+
+
 class SlotArena:
     """Owns the arena cache pytree: ``max_slots`` persistent decode slots
     sharing one pre-allocated KV/SSM cache, each with an independent fill
-    point (per-slot ``KVCache.length``)."""
+    point (per-slot ``KVCache.length``).
+
+    ``kv_bits`` follows :meth:`KVCache.create`: None / 8 / 4 for
+    homogeneous storage, or a tuple of tier codes for the mixed per-slot
+    arena.  ``tiers`` is the host-side slot -> tier-name vector the engine
+    maintains at admit/release time (None = slot free)."""
 
     def __init__(self, model, max_slots: int, max_len: int,
-                 kv_bits: Optional[int] = None):
+                 kv_bits=None):
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_bits = kv_bits
         self.caches: Any = model.init_cache(max_slots, max_len,
                                             kv_bits=kv_bits)
+        self.tiers: List[Optional[str]] = [None] * max_slots

@@ -1,0 +1,72 @@
+"""Docs CI: every relative link and code path referenced in README.md and
+docs/*.md must exist in the repo (pure file checks — no JAX import, so the
+docs CI job can run this standalone)."""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = [os.path.join(REPO, "README.md")] + sorted(
+    os.path.join(REPO, "docs", f)
+    for f in os.listdir(os.path.join(REPO, "docs")) if f.endswith(".md"))
+
+# [text](target) markdown links, skipping images is irrelevant here.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
+# `inline code` spans that look like file paths: contain a "/" or end in a
+# known source suffix.  Python dotted module paths and attribute references
+# are skipped.
+_CODE_RE = re.compile(r"`([^`\s]+)`")
+_PATH_SUFFIXES = (".py", ".md", ".txt", ".yml", ".yaml", ".json")
+# Paths inside backticks may be repo-relative or package-relative.
+_SEARCH_ROOTS = ("", "src/repro", "src")
+
+
+def _doc_ids():
+    return [os.path.relpath(p, REPO) for p in DOC_FILES]
+
+
+def _exists_anywhere(path: str) -> bool:
+    for root in _SEARCH_ROOTS:
+        if os.path.exists(os.path.join(REPO, root, path)):
+            return True
+    return False
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    assert os.path.isfile(os.path.join(REPO, "docs", "architecture.md"))
+    assert os.path.isfile(os.path.join(REPO, "docs", "serving.md"))
+    readme = open(os.path.join(REPO, "README.md")).read()
+    assert "docs/architecture.md" in readme, "README must link the docs"
+    assert "docs/serving.md" in readme, "README must link the docs"
+
+
+@pytest.mark.parametrize("doc", _doc_ids())
+def test_relative_links_resolve(doc):
+    path = os.path.join(REPO, doc)
+    base = os.path.dirname(path)
+    text = open(path).read()
+    missing = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue
+        if not os.path.exists(os.path.join(base, target)):
+            missing.append(target)
+    assert not missing, f"{doc}: broken relative links: {missing}"
+
+
+@pytest.mark.parametrize("doc", _doc_ids())
+def test_code_paths_exist(doc):
+    text = open(os.path.join(REPO, doc)).read()
+    missing = []
+    for span in _CODE_RE.findall(text):
+        span = span.rstrip(",.;:")
+        looks_like_path = "/" in span and span.endswith(_PATH_SUFFIXES)
+        if not looks_like_path:
+            continue
+        if not _exists_anywhere(span):
+            missing.append(span)
+    assert not missing, f"{doc}: referenced code paths not found: {missing}"

@@ -1,0 +1,304 @@
+"""Mixed-tier decode batches + per-request KV-cache precision tiers.
+
+The PR's contracts:
+
+  * per-row-group matmul — one plane-prefix GEMM per contiguous tier group
+    (ops.matmul / bitserial_matmul_pallas / the decomposed oracle), exact
+    per row vs homogeneous execution;
+  * mixed KV arena — one byte-lane arena serving bf16 / int8 / int4-packed
+    slots side by side, bit-identical per slot to the homogeneous cache at
+    that kv precision, with int4 round-trip error bounded by half an LSB;
+  * engine — a single decode batch holding tiers {8/8, 4/4, 2/2} produces
+    per-request tokens identical to fixed-tier BatchServeEngine references
+    AND natively-prepared fixed-precision engines, with zero prepare_params
+    calls after construction; slots are reused across different kv tiers.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import decompose
+from repro.core.policy import (LayerPrecision, PrecisionSchedule,
+                               uniform_policy, uniform_schedule)
+from repro.kernels import ops
+from repro.models.layers import KVCache, Runtime
+from repro.models.transformer import LM
+from repro.serve import engine as engine_mod
+from repro.serve.engine import BatchServeEngine, Request, ServeEngine
+
+TIERS = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+KV_TIERS = {"8/8": None, "4/4": 8, "2/2": 4}
+
+
+# ------------------------------------------------------ grouped matmul path
+def test_ops_matmul_row_groups_match_homogeneous():
+    """Every row of a mixed-tier grouped matmul equals the homogeneous
+    matmul at that row's precision — both integer backends."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(7, 1, 64)), jnp.float32)
+    for packed in (False, True):
+        qw = ops.prepare_superplane(w, signed=True, packed=packed)
+        for backend in ("decomposed", "pallas"):
+            groups = tuple(
+                (n, LayerPrecision(b, b, backend=backend))
+                for n, b in ((3, 8), (2, 4), (2, 2)))
+            got = ops.matmul(x, None, groups[0][1], qw=qw, row_groups=groups)
+            off = 0
+            for n, prec in groups:
+                want = ops.matmul(x[off:off + n], None, prec, qw=qw)
+                np.testing.assert_array_equal(
+                    np.asarray(got[off:off + n], np.float32),
+                    np.asarray(want, np.float32), err_msg=backend)
+                off += n
+
+
+def test_ops_matmul_row_groups_with_permutation():
+    """``perm`` gathers rows into group order; codes/scales come from the
+    un-permuted full-batch quantization (the bitwise-stability contract)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    qw = ops.prepare_superplane(w, signed=True)
+    groups = ((2, LayerPrecision(8, 8, backend="decomposed")),
+              (2, LayerPrecision(2, 2, backend="decomposed")))
+    perm = jnp.asarray([2, 0, 3, 1])     # rows 2,0 are 8-bit; rows 3,1 2-bit
+    got = ops.matmul(x, None, groups[0][1], qw=qw, row_groups=groups,
+                     perm=perm)
+    for i, (row, prec) in enumerate(zip([2, 0, 3, 1],
+                                        [groups[0][1]] * 2 + [groups[1][1]] * 2)):
+        want = ops.matmul(x[row:row + 1], None, prec, qw=qw)
+        np.testing.assert_array_equal(np.asarray(got[i:i + 1], np.float32),
+                                      np.asarray(want, np.float32))
+
+
+def test_kernel_level_row_groups():
+    """The Pallas wrapper and the decomposed oracle both take per-row-group
+    effective widths and agree exactly."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(-127, 128, size=(6, 64)), jnp.int8)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    sp = ops.prepare_superplane(w, signed=True)
+    rg = ((2, 8), (1, 6), (2, 4), (1, 2))
+    got_pallas = ops.bitserial_matmul_pallas(x, sp, row_groups=rg)
+    got_oracle = decompose.decomposed_matmul_grouped(
+        x.astype(jnp.int32), sp.planes, rg)
+    np.testing.assert_array_equal(np.asarray(got_pallas),
+                                  np.asarray(got_oracle))
+    off = 0
+    for n, eff in rg:
+        want = ops.bitserial_matmul_pallas(x[off:off + n], sp, eff_bits=eff)
+        np.testing.assert_array_equal(np.asarray(got_pallas[off:off + n]),
+                                      np.asarray(want))
+        off += n
+    with pytest.raises(ValueError, match="cover"):
+        ops.bitserial_matmul_pallas(x, sp, row_groups=((2, 8),))
+    with pytest.raises(ValueError, match="cover"):
+        decompose.decomposed_matmul_grouped(x.astype(jnp.int32), sp.planes,
+                                            ((2, 8),))
+
+
+# ---------------------------------------------------------- mixed KV arena
+def test_mixed_kv_arena_matches_homogeneous_modes():
+    """Each slot of the mixed byte-lane arena stores/reads EXACTLY what the
+    homogeneous cache at that slot's kv tier does (prefill + decode)."""
+    rng = np.random.default_rng(3)
+    B, S, KVH, DH = 4, 8, 2, 16
+    k = jnp.asarray(rng.normal(size=(B, S, KVH, DH)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KVH, DH)), jnp.float32)
+    k1 = jnp.asarray(rng.normal(size=(B, 1, KVH, DH)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(B, 1, KVH, DH)), jnp.float32)
+    slot_modes = [None, 8, 4, 8]
+
+    mixed = KVCache.create(B, S, KVH, DH, kv_bits=(16, 8, 4))
+    mixed = dataclasses.replace(mixed, kv_bits=jnp.asarray(
+        [16 if m is None else m for m in slot_modes], jnp.int32))
+    mixed = mixed.update(k, v, 0, new_length=jnp.asarray([5, 5, 5, 5]))
+    mixed = mixed.append(k1, v1, active=jnp.asarray([True, True, True, False]))
+    km, vm = mixed.read()
+
+    for i, mode in enumerate(slot_modes):
+        ref = KVCache.create(B, S, KVH, DH, kv_bits=mode)
+        ref = ref.update(k, v, 0, new_length=jnp.asarray([5, 5, 5, 5]))
+        ref = ref.append(k1, v1,
+                         active=jnp.asarray([True, True, True, False]))
+        kr, vr = ref.read()
+        np.testing.assert_array_equal(np.asarray(km[i], np.float32),
+                                      np.asarray(kr[i], np.float32),
+                                      err_msg=f"slot {i} mode {mode}")
+        np.testing.assert_array_equal(np.asarray(vm[i], np.float32),
+                                      np.asarray(vr[i], np.float32))
+        np.testing.assert_array_equal(np.asarray(mixed.length),
+                                      np.asarray(ref.length))
+
+
+def test_kv_int4_roundtrip_error_bound():
+    """int4-packed KV: |dequant - x| <= scale/2 per (position, head) row
+    (round-to-nearest with scale = amax/7), and codes use the full range."""
+    rng = np.random.default_rng(4)
+    B, S, KVH, DH = 2, 4, 2, 32
+    x = jnp.asarray(rng.normal(size=(B, S, KVH, DH)), jnp.float32)
+    c = KVCache.create(B, S, KVH, DH, kv_bits=4).update(x, x, 0)
+    kq, _ = c.read(jnp.float32)
+    amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    scale = np.maximum(amax, 1e-8) / 7.0
+    err = np.abs(np.asarray(kq, np.float32) - np.asarray(x))
+    # bf16 scale storage adds <= 2^-9 relative on top of the half-LSB bound
+    assert (err <= scale * (0.5 + 2.0 ** -8)).all(), err.max()
+    codes = np.asarray(c.k)
+    assert codes.max() > 0          # packed nibbles actually populated
+
+
+def test_kv_cache_create_validation():
+    with pytest.raises(ValueError, match="kv_bits"):
+        KVCache.create(1, 4, 2, 16, kv_bits=3)
+    with pytest.raises(ValueError, match="even head_dim"):
+        KVCache.create(1, 4, 2, 15, kv_bits=4)
+    with pytest.raises(ValueError, match="tiers must be from"):
+        KVCache.create(1, 4, 2, 16, kv_bits=(16, 5))
+    c = KVCache.create(2, 4, 2, 16, kv_bits=(16, 8, 4))
+    assert c.mixed and c.modes == (16, 8, 4)
+    assert c.k.shape[-1] == 32      # lanes sized for the widest (bf16) tier
+    assert c.head_dim == 16
+
+
+def test_schedule_kv_tiers_validation_and_lookup():
+    sched = uniform_schedule(TIERS, kv_tiers=KV_TIERS)
+    assert sched.kv_bits_for("8/8") is None
+    assert sched.kv_bits_for("4/4") == 8
+    assert sched.kv_code_for("8/8") == 16
+    assert sched.kv_code_for("2/2") == 4
+    assert sched.kv_modes == (16, 8, 4)
+    # Tiers left out of kv_tiers default to bf16.
+    part = uniform_schedule(TIERS, kv_tiers={"2/2": 4})
+    assert part.kv_bits_for("8/8") is None and part.kv_modes == (16, 4)
+    assert uniform_schedule(TIERS).kv_modes is None
+    with pytest.raises(ValueError, match="unknown tier"):
+        uniform_schedule(TIERS, kv_tiers={"9/9": 8})
+    with pytest.raises(ValueError, match="kv tier must be"):
+        uniform_schedule(TIERS, kv_tiers={"8/8": 2})
+
+
+# ------------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule(TIERS, kv_tiers=KV_TIERS)
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    return cfg, model, params, sched, rt
+
+
+def _reqs(cfg, tiers, budgets, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=3 + i % 4),
+                    max_new_tokens=b, tier=t)
+            for i, (t, b) in enumerate(zip(tiers, budgets))]
+
+
+def test_mixed_batch_token_identity_all_references(setup):
+    """THE acceptance criterion: one decode batch holding {8/8, 4/4, 2/2}
+    (weight AND kv tiers) is per-request token-identical to (a) fixed-tier
+    BatchServeEngine references sharing the superplane store and (b)
+    natively-prepared fixed-precision engines, with zero prepare_params
+    calls after construction."""
+    cfg, model, params, sched, rt = setup
+    tiers = ["8/8", "4/4", "2/2", "2/2", "8/8", "4/4", "2/2"]
+    reqs = _reqs(cfg, tiers, [3, 4, 2, 4, 2, 3, 3])
+    eng = ServeEngine(model, params, rt, max_batch=3, max_len=64,
+                      decode_chunk=3)
+    preps = engine_mod.PREPARE_CALLS
+    got = eng.run(reqs)
+    assert engine_mod.PREPARE_CALLS == preps, "re-prepared weights mid-run"
+    assert eng.stats.mixed_tier_chunks >= 1, "no mixed-tier batch was run"
+
+    for tier, (w, a) in TIERS.items():
+        sub = [r for r in reqs if r.tier == tier]
+        # (a) fixed-tier baseline over the SAME superplane store; its KV
+        # cache automatically follows the schedule's kv tier.
+        base = BatchServeEngine(model, eng.params, rt, max_batch=1,
+                                max_len=64, tier=tier)
+        assert base.kv_bits == KV_TIERS[tier]
+        want = base.run([Request(uid=r.uid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens, tier=tier)
+                         for r in sub])
+        for r in sub:
+            assert got[r.uid] == want[r.uid], ("batch-ref", tier, r.uid)
+        # (b) natively prepared at the tier precision, homogeneous kv mode.
+        native = ServeEngine(
+            model, params,
+            Runtime(policy=uniform_policy(w, a, backend="decomposed"),
+                    mode="serve", moe_dropless=True),
+            max_batch=3, max_len=64, decode_chunk=3,
+            kv_bits=KV_TIERS[tier])
+        want_n = native.run([Request(uid=r.uid, prompt=r.prompt,
+                                     max_new_tokens=r.max_new_tokens)
+                             for r in sub])
+        for r in sub:
+            assert got[r.uid] == want_n[r.uid], ("native", tier, r.uid)
+
+
+def test_slot_reuse_across_kv_tiers(setup):
+    """One slot serves bf16 -> int4 -> int8 requests back to back: the
+    per-slot kv tier lane is rewritten at each admission and outputs stay
+    identical to per-tier references."""
+    cfg, model, params, sched, rt = setup
+    tiers = ["8/8", "2/2", "4/4", "2/2"]
+    reqs = _reqs(cfg, tiers, [2, 3, 2, 2], seed=13)
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    got = eng.run(reqs)
+    assert eng.arena.tiers == [None]          # all released at drain
+    for tier in set(tiers):
+        sub = [r for r in reqs if r.tier == tier]
+        base = BatchServeEngine(model, eng.params, rt, max_batch=1,
+                                max_len=64, tier=tier)
+        want = base.run([Request(uid=r.uid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens, tier=tier)
+                         for r in sub])
+        for r in sub:
+            assert got[r.uid] == want[r.uid], (tier, r.uid)
+
+
+def test_serialized_mode_matches_mixed(setup):
+    """mixed_tiers=False (the PR-2 tier-serialized baseline) produces the
+    same per-request tokens, with serialized-mode stats."""
+    cfg, model, params, sched, rt = setup
+    tiers = ["4/4", "2/2", "4/4", "2/2"]
+    reqs = _reqs(cfg, tiers, [3, 2, 2, 3], seed=17)
+    mixed = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                        decode_chunk=3)
+    got_m = mixed.run(reqs)
+    serial = ServeEngine(model, mixed.params, rt, max_batch=2, max_len=64,
+                         decode_chunk=3, mixed_tiers=False)
+    got_s = serial.run([Request(uid=r.uid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens, tier=r.tier)
+                        for r in reqs])
+    for r in reqs:
+        assert got_m[r.uid] == got_s[r.uid], r.uid
+    assert serial.stats.mixed_tier_chunks == 0
+    assert mixed.stats.tier_switches == 0
+
+
+def test_group_layout_derivation(setup):
+    """The per-step layout: tiers in schedule order, free slots riding in
+    the default tier's group, perm realizing the sorted order."""
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=4, max_len=32)
+    eng.arena.tiers = ["2/2", None, "4/4", "2/2"]
+    groups, perm = eng._group_layout()
+    assert groups == (("8/8", 1), ("4/4", 1), ("2/2", 2))
+    assert list(perm) == [1, 2, 0, 3]
+
+
+def test_engine_kv_conflict_validation(setup):
+    cfg, model, params, sched, rt = setup
+    with pytest.raises(ValueError, match="kv_bits conflicts"):
+        ServeEngine(model, params, rt, max_batch=2, max_len=32, kv_bits=8)

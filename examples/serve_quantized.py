@@ -39,8 +39,16 @@ def main():
                 max_new_tokens=2 + 3 * (i % 4))
         for i in range(8)
     ]
+    # The streaming API: submit returns a handle per request immediately;
+    # each step() emits TokenEvents as slots produce tokens.  (The blocking
+    # form `engine.run(requests)` is a thin wrapper over this same loop.)
     t0 = time.time()
-    results = engine.run(requests)
+    handles = [engine.submit(r) for r in requests]
+    handles[0].on_token(
+        lambda ev: print(f"  [stream] req 0 token {ev.index}: {ev.token}"))
+    while engine.has_work:
+        engine.step()
+    results = {h.uid: h.tokens for h in handles}
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     st = engine.stats

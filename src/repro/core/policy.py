@@ -208,6 +208,17 @@ class PrecisionSchedule:
         codes = {self.kv_code_for(t) for t in self.tiers}
         return tuple(sorted(codes, reverse=True))
 
+    def tier_bits(self, tier: Optional[str] = None) -> tuple:
+        """A tier's default ``(w_bits, a_bits)`` operating point — what the
+        hwmodel prices admission with (``energy.relative_tier_costs``).
+        Per-layer rule refinements are deliberately ignored here: admission
+        is priced per request, not per layer."""
+        tier = self.default_tier if tier is None else tier
+        if tier not in self.tiers:
+            raise KeyError(f"unknown tier {tier!r}; have {sorted(self.tiers)}")
+        prec = self.tiers[tier]
+        return (prec.w_bits, prec.a_bits)
+
     def lookup(self, name: str, tier: Optional[str] = None) -> LayerPrecision:
         tier = self.default_tier if tier is None else tier
         if tier not in self.tiers:

@@ -148,6 +148,23 @@ def precision_tier_table(tiers: Dict[str, Tuple[int, int]],
     return {name: tier_cost(w, a, **kw) for name, (w, a) in tiers.items()}
 
 
+def relative_tier_costs(schedule) -> Dict[str, float]:
+    """Relative per-token service cost of each tier of a
+    ``PrecisionSchedule`` (cycles/MAC from :func:`tier_cost`, normalized so
+    the cheapest tier costs 1.0).
+
+    This is the admission-pricing hook used by
+    ``repro.serve.scheduler.SLOPolicy``: a tier that runs more plane passes
+    / deeper bit-serial activations occupies the modeled array longer per
+    token, so a deadline-aware scheduler must budget more service time for
+    its requests."""
+    raw = {name: tier_cost(w, a)["cycles_per_mac"]
+           for name, (w, a) in ((t, schedule.tier_bits(t))
+                                for t in schedule.tier_names)}
+    floor = min(raw.values())
+    return {name: c / floor for name, c in raw.items()}
+
+
 # Published comparison rows (Table III), scaled-to-28nm values as printed.
 TABLE3_OTHERS = {
     "TVLSI22_bitparallel": {"peak_tops": 4.12, "eff_8bit": 3.62,

@@ -1,7 +1,7 @@
 """Serving driver: offline-quantize a model (Table-I planes, optionally
-packed) and serve a stream of greedy-decode requests through the
-continuous-batching engine (`--baseline` runs the batch-at-a-time
-reference engine for comparison).
+packed) and serve a stream of greedy-decode requests through the streaming
+engine API — ``submit() -> RequestHandle`` / ``step() -> [TokenEvent]`` /
+``drain()`` (`--baseline` runs the batch-at-a-time reference engine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --w-bits 4 --kv-bits 8 --requests 8
@@ -20,6 +20,17 @@ Per-request KV-cache precision (one kv value per tier, aligned with
         --tiers 8/8 4/4 2/2 --kv-tiers bf16 8 4 --requests 9
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --tiers 8/8 4/4 2/2 --serialize-tiers --requests 9
+
+SLO-aware admission (deadline slack priced by the hwmodel's per-tier cycle
+cost instead of plain FIFO; every 3rd request gets a tight deadline) and
+mid-stream tier migration (the first live request is migrated to the LAST
+--tiers entry after a few tokens — KV lane requantized in place, weight
+plane prefix switched at the next group layout):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --slo --requests 9
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --kv-tiers bf16 8 4 --migrate-demo --requests 6
 """
 from __future__ import annotations
 
@@ -33,8 +44,9 @@ from repro.configs import get_config, reduced_config
 from repro.core.policy import uniform_policy, uniform_schedule
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
-from repro.serve.engine import (BatchServeEngine, Request, ServeEngine,
-                                prepare_params)
+from repro.serve import (BatchServeEngine, Request, ServeEngine, SLOPolicy,
+                         prepare_params)
+from repro.serve.handle import RequestStatus
 
 
 def main(argv=None):
@@ -67,6 +79,15 @@ def main(argv=None):
                          "batch; PR-2 behaviour) instead of mixed-tier "
                          "batches — the serve_mixed_tiers comparison "
                          "baseline")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-aware admission (SLOPolicy): every 3rd "
+                         "request gets a tight deadline; reports per-"
+                         "request queue waits and deadline misses")
+    ap.add_argument("--migrate-demo", action="store_true",
+                    help="mid-stream tier migration demo: after a few "
+                         "tokens the first live request is migrated to the "
+                         "last --tiers entry (requantizes its KV lane in "
+                         "place; needs --tiers, mixed admission)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -102,6 +123,14 @@ def main(argv=None):
             ap.error("--serialize-tiers needs --tiers")
         policy = uniform_policy(args.w_bits, args.a_bits,
                                 backend=args.backend)
+    if args.migrate_demo:
+        if not args.tiers or len(args.tiers) < 2:
+            ap.error("--migrate-demo needs --tiers with >= 2 tiers")
+        if args.serialize_tiers or args.baseline:
+            ap.error("--migrate-demo needs mixed-tier admission (drop "
+                     "--serialize-tiers / --baseline)")
+    if args.slo and args.baseline:
+        ap.error("--slo has no effect on the batch-at-a-time baseline")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = LM(cfg)
@@ -121,27 +150,60 @@ def main(argv=None):
               f"in {time.time()-t0:.1f}s")
     rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced,
                  schedule=schedule)
-    cls = BatchServeEngine if args.baseline else ServeEngine
-    kw = {} if args.baseline else {"decode_chunk": args.decode_chunk,
-                                   "mixed_tiers": not args.serialize_tiers}
-    engine = cls(model, params, rt, max_batch=args.max_batch,
-                 max_len=args.max_len, kv_bits=args.kv_bits, **kw)
+    if args.baseline:
+        engine = BatchServeEngine(model, params, rt,
+                                  max_batch=args.max_batch,
+                                  max_len=args.max_len, kv_bits=args.kv_bits)
+    else:
+        scheduler_policy = SLOPolicy(schedule) if args.slo else None
+        engine = ServeEngine(model, params, rt, max_batch=args.max_batch,
+                             max_len=args.max_len, kv_bits=args.kv_bits,
+                             decode_chunk=args.decode_chunk,
+                             mixed_tiers=not args.serialize_tiers,
+                             scheduler_policy=scheduler_policy)
 
     rng = np.random.default_rng(args.seed)
     tier_of = (lambda i: args.tiers[i % len(args.tiers)]) if args.tiers \
         else (lambda i: None)
+    # --slo: a deadline-skewed stream — every 3rd request is urgent (a
+    # tight budget in scheduler-clock ticks); the rest are patient.
+    deadline_of = (lambda i: 4.0 * args.max_new if i % 3 == 2
+                   else 50.0 * args.max_new) if args.slo else (lambda i: None)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
                     max_new_tokens=1 + (args.max_new * (i % 4)) // 3,
-                    tier=tier_of(i))
+                    tier=tier_of(i), deadline=deadline_of(i))
             for i in range(args.requests)]
+
+    # The streaming loop: submit everything, step until drained, stream
+    # tokens through the handles' events.
     t0 = time.time()
-    results = engine.run(reqs)
+    handles = [engine.submit(r) for r in reqs]
+    migrated = None
+    events = 0
+    while engine.has_work:
+        events += len(engine.step())
+        if args.migrate_demo and migrated is None:
+            target = args.tiers[-1]
+            for h in handles:
+                if (h.status is RequestStatus.RUNNING and h.tier != target
+                        and len(h.tokens) >= 2):
+                    h.set_tier(target)
+                    migrated = h
+                    print(f"migrated uid={h.uid} -> {target} after "
+                          f"{len(h.tokens)} tokens (clock {engine.clock:.0f})")
+                    break
     dt = time.time() - t0
+    if args.migrate_demo and migrated is None:
+        print("migrate-demo: no request lived long enough to migrate — "
+              "every budget fit one decode chunk; raise --max-new or "
+              "lower --decode-chunk")
+    results = {h.uid: h.tokens for h in handles}
+    assert results == {r.uid: engine.results[r.uid] for r in reqs}
     toks = sum(len(v) for v in results.values())
     st = engine.stats
-    print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s)")
+    print(f"served {len(reqs)} requests, {toks} tokens "
+          f"({events} streamed events) in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     print(f"stats: prefills={st.prefills} decode_steps={st.decode_steps} "
           f"slot_steps={st.decode_slot_steps} chunks={st.decode_chunks}")
     if args.tiers:
@@ -150,7 +212,17 @@ def main(argv=None):
         mode = "serialized" if args.serialize_tiers else "mixed"
         print(f"tier decode_steps ({mode}): {per} "
               f"(switches={st.tier_switches} "
-              f"mixed_chunks={st.mixed_tier_chunks})")
+              f"mixed_chunks={st.mixed_tier_chunks} "
+              f"migrations={st.tier_migrations} "
+              f"kv_migrations={st.kv_migrations})")
+    if args.slo:
+        waits = np.array([h.queue_wait for h in handles])
+        misses = sum(1 for h in handles
+                     if h.request.deadline is not None
+                     and h.finished_at > h.submitted_at + h.request.deadline)
+        print(f"slo: queue_wait p50={np.percentile(waits, 50):.0f} "
+              f"p99={np.percentile(waits, 99):.0f} ticks, "
+              f"deadline_misses={misses}/{len(handles)}")
     return results
 
 

@@ -507,6 +507,33 @@ class KVCache:
             self, k=k, v=v, k_scale=put(self.k_scale, ks[:, 0]),
             v_scale=put(self.v_scale, vs[:, 0]), length=ln)
 
+    def requantize(self, kv_bits_new) -> "KVCache":
+        """Re-encode the stored K/V at new per-slot tier codes (mixed mode
+        only) — the KV half of mid-stream tier migration.
+
+        ``kv_bits_new`` is a (traced-ok) int32 tier code (16/8/4), scalar or
+        [B], broadcast over the slot axis.  The result is exactly what
+        :meth:`update` would have stored had the dequantized cache been
+        written at the target tier in the first place: dequantize every
+        lane at its CURRENT per-slot tier (through :meth:`read`'s barriered
+        path), flip the tier codes, re-encode through the same `_encode`
+        path.  bf16 -> bf16 is bit-exact (bitcast round-trip); narrowing
+        migrations requantize through the shared ``_kv_quant`` so the
+        migrated lane is bit-identical to quantizing the dequantized cache
+        directly at the target precision.  Lengths and all other slots'
+        data are untouched (callers migrate one slot via a slot view)."""
+        if not self.mixed:
+            raise ValueError("requantize() needs the mixed per-slot KV "
+                             "arena (kv_bits tier codes)")
+        k, v = self.read(jnp.bfloat16)
+        out = dataclasses.replace(
+            self, kv_bits=jnp.broadcast_to(
+                jnp.asarray(kv_bits_new, self.kv_bits.dtype),
+                self.kv_bits.shape))
+        kq, ks = out._encode(k)
+        vq, vs = out._encode(v)
+        return dataclasses.replace(out, k=kq, v=vq, k_scale=ks, v_scale=vs)
+
     def read(self, dtype=jnp.bfloat16):
         """Dequantized (K, V) views of the whole arena.
 

@@ -1,17 +1,32 @@
-"""Serving stack: slot-based continuous batching with preloaded weight
-planes.
+"""Serving stack: a streaming API over slot-based continuous batching with
+preloaded weight planes.
 
-``engine``    — ServeEngine (continuous batching) + BatchServeEngine
-                (batch-at-a-time reference) + prepare_params (weight preload)
-``scheduler`` — host-side FIFO admission over fixed slots
-``slots``     — per-slot cache arena views (reset/refill one slot in place)
-``request``   — the Request dataclass
+The public surface is the :class:`Engine` protocol — ``submit(request) ->
+RequestHandle``, ``step() -> list[TokenEvent]``, ``drain()``, plus the
+blocking ``run`` wrapper — implemented by both engines:
+
+``engine``    — ``ServeEngine`` (continuous batching, mixed-tier decode,
+                mid-stream tier migration) + ``BatchServeEngine``
+                (batch-at-a-time reference) + ``prepare_params`` (weight
+                preload) + the ``Engine`` protocol itself
+``handle``    — ``RequestHandle`` (token iterator/callback, terminal
+                status, ``set_tier``), ``TokenEvent``, ``RequestStatus``
+``scheduler`` — host-side admission over fixed slots with pluggable
+                ``SchedulerPolicy`` (``FIFOPolicy`` default, deadline-aware
+                ``SLOPolicy``)
+``slots``     — per-slot cache arena views (reset/refill/requantize one
+                slot in place)
+``request``   — the ``Request`` dataclass (uid, prompt, budget, tier,
+                deadline)
 """
-from repro.serve.engine import (BatchServeEngine, EngineStats, Request,
-                                ServeEngine, prepare_params)
-from repro.serve.scheduler import ANY_TIER, Scheduler, SlotState
+from repro.serve.engine import (BatchServeEngine, Engine, EngineStats,
+                                Request, ServeEngine, prepare_params)
+from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
+from repro.serve.scheduler import (ANY_TIER, FIFOPolicy, Scheduler,
+                                   SchedulerPolicy, SLOPolicy, SlotState)
 from repro.serve.slots import SlotArena
 
-__all__ = ["ANY_TIER", "BatchServeEngine", "EngineStats", "Request",
-           "ServeEngine", "prepare_params", "Scheduler", "SlotState",
-           "SlotArena"]
+__all__ = ["ANY_TIER", "BatchServeEngine", "Engine", "EngineStats",
+           "FIFOPolicy", "Request", "RequestHandle", "RequestStatus",
+           "SLOPolicy", "SchedulerPolicy", "Scheduler", "ServeEngine",
+           "SlotArena", "SlotState", "TokenEvent", "prepare_params"]

@@ -1,9 +1,15 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching serving engines behind the streaming API.
 
 The paper's dataflow is "serial activation input, parallel weight
 preloaded": decomposed weight planes stay resident while activations stream
 through.  The engine mirrors that end to end:
 
+* **Incremental core** — the public surface is ``submit(request) ->
+  RequestHandle`` / ``step() -> list[TokenEvent]`` / ``drain()``:
+  requests enter any time, every scheduling round returns the tokens it
+  emitted, and handles stream them (iterator + callback) as they arrive.
+  ``run(requests)`` is a thin compatibility wrapper (submit all, drain,
+  collect) and is token-identical to the historical blocking API.
 * **Weight preload** — at construction the float params are converted ONCE
   into the ``QuantizedWeight`` plane pytree (``prepare_params``); that
   prepared pytree is the engine's only weight representation.
@@ -14,59 +20,73 @@ through.  The engine mirrors that end to end:
   re-preparation (``PREPARE_CALLS`` counts preparations — it must not move
   after construction).
 * **Mixed-tier decode batches** — slots are tier-tagged: admission fills
-  ANY free slot (plain FIFO), and each decode chunk derives a per-step
-  group layout from the occupied slots' tiers — a jit-STATIC tuple of
-  ``(tier, rows)`` sorted by tier, plus a TRACED permutation mapping batch
-  rows into that order.  Every projection then runs one plane-prefix GEMM
-  per group, so one jitted decode step serves slots at 8/6/4/2 bits
-  simultaneously (see ``models.layers.linear``).  ``mixed_tiers=False``
-  keeps the PR-2 tier-serialized admission (one tier per decode batch) as
-  the comparison baseline.
+  ANY free slot, and each decode chunk derives a per-step group layout from
+  the occupied slots' tiers — a jit-STATIC tuple of ``(tier, rows)`` sorted
+  by tier, plus a TRACED permutation mapping batch rows into that order.
+  Every projection then runs one plane-prefix GEMM per group, so one jitted
+  decode step serves slots at 8/6/4/2 bits simultaneously (see
+  ``models.layers.linear``).  ``mixed_tiers=False`` keeps the PR-2
+  tier-serialized admission (one tier per decode batch) as the baseline.
+* **Mid-stream tier migration** — ``RequestHandle.set_tier(name)`` moves a
+  LIVE request to another tier: the slot's KV lane is requantized in place
+  (``slots.migrate_kv_tier`` — one jitted dequantize/re-encode through the
+  nested-quantization path, bit-identical to quantizing the dequantized
+  cache directly at the target precision) and the weight plane prefix
+  switches at the next group-layout derivation.  QUEUED requests are
+  simply re-tagged.
+* **Pluggable admission** — WHICH waiting request takes a freed slot is a
+  ``SchedulerPolicy``: ``FIFOPolicy`` (default, bit-identical to the
+  historical behaviour) or ``SLOPolicy`` (deadline slack vs. the hwmodel's
+  per-tier cycle cost; see ``serve/scheduler.py``).
 * **Per-request KV precision** — a schedule with ``kv_tiers`` allocates one
   mixed per-slot KV arena: each admitted request's slot stores K/V at its
-  tier's precision (bf16 / int8 / int4-packed lanes, per-slot scale rows),
-  so a low tier shrinks its decode-memory footprint along with its
-  weight-plane reads.
+  tier's precision (bf16 / int8 / int4-packed lanes, per-slot scale rows).
 * **Persistent decode state** — a fixed-slot cache arena
   (:mod:`repro.serve.slots`): per-slot KV lengths and SSM states live in one
   pre-allocated pytree across the whole request stream.
-* **Per-slot admission** — a freed slot is re-prefilled individually
-  (:mod:`repro.serve.scheduler`); occupied slots keep decoding untouched.
 * **On-device decode loop** — the inner loop is ONE jitted multi-step
   ``jax.lax.scan`` over a chunk of decode steps with an active-slot mask and
   masked cache writes; the host only admits/retires requests between
   chunks, so per-token dispatch overhead is off the critical path.
 
-A slot stops consuming decode work the step its budget is exhausted (the
-active mask), unlike batch-at-a-time scheduling where every slot decodes
-until the batch-wide max (see :class:`BatchServeEngine`, kept as the
-reference baseline).
-
 Jit-static vs traced (the contract everything above hangs on): tier names,
 group layouts, chunk lengths and prompt buckets are STATIC (they key
 traces: at most |layouts| x decode_chunk decode entries); slot indices,
-token ids, budgets, the group permutation and per-slot KV tier codes are
-TRACED (they change every step without retracing).
+token ids, budgets, the group permutation, per-slot KV tier codes and the
+migration target code are TRACED (they change every step/migration without
+retracing).
+
+The scheduler clock: every engine counts decode steps executed
+(``Engine.clock``); submission times, queue waits and ``Request.deadline``
+are priced in these ticks, keeping SLO admission fully deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import (Any, Dict, List, Optional, Protocol, Sequence, Set,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import numpy.typing as npt
 
 from repro.core.policy import PrecisionPolicy
 from repro.kernels import ops
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
 from repro.serve import slots as slots_lib
+from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Scheduler, SchedulerPolicy
 
-__all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
+__all__ = ["Request", "RequestHandle", "RequestStatus", "TokenEvent",
+           "Engine", "ServeEngine", "BatchServeEngine", "EngineStats",
            "prepare_params", "PREPARE_CALLS"]
+
+# Mixed-tier group layout: the jit-STATIC tuple of (tier name, rows) runs
+# describing a tier-sorted decode batch (see Runtime.for_groups).
+GroupLayout = Tuple[Tuple[str, int], ...]
 
 # Global weight-preparation counter: every prepare_params call (one quantize+
 # decompose sweep over the params) bumps it.  The runtime-tier contract —
@@ -75,8 +95,9 @@ __all__ = ["Request", "ServeEngine", "BatchServeEngine", "EngineStats",
 PREPARE_CALLS = 0
 
 
-def prepare_params(params, policy: PrecisionPolicy, model: LM,
-                   packed: bool = False, superplane: bool = False):
+def prepare_params(params: Any, policy: PrecisionPolicy, model: LM,
+                   packed: bool = False,
+                   superplane: bool = False) -> Tuple[Any, List[str]]:
     """Quantize + decompose every policy-covered projection weight offline.
 
     Returns a params pytree where 2D projection weights are replaced by
@@ -87,7 +108,7 @@ def prepare_params(params, policy: PrecisionPolicy, model: LM,
     global PREPARE_CALLS
     PREPARE_CALLS += 1
 
-    def prep(leaf, prec):
+    def prep(leaf: Any, prec: Any) -> Any:
         if superplane:
             return ops.prepare_superplane(leaf, signed=prec.w_signed,
                                           packed=packed)
@@ -95,7 +116,7 @@ def prepare_params(params, policy: PrecisionPolicy, model: LM,
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
-    quantized_paths = []
+    quantized_paths: List[str] = []
     for kp, leaf in flat:
         path = jax.tree_util.keystr(kp)
         is_proj = path.endswith("['w']") and leaf.ndim >= 2 \
@@ -133,12 +154,32 @@ def _path_to_layer_name(path: str) -> str:
     return ".".join(parts)
 
 
-def _params_prepared(params) -> bool:
+def _validate_request(request: Request, max_len: int,
+                      seen_uids: Set[int]) -> None:
+    """The admission contract both engines share (one place to change):
+    non-empty prompt, positive decode budget, fits the arena, fresh uid."""
+    plen = len(request.prompt)
+    if plen == 0:
+        raise ValueError(f"request {request.uid}: empty prompt")
+    if request.max_new_tokens < 1:
+        raise ValueError(f"request {request.uid}: max_new_tokens must be "
+                         f">= 1, got {request.max_new_tokens}")
+    if plen + request.max_new_tokens > max_len:
+        raise ValueError(
+            f"request {request.uid}: prompt ({plen}) + max_new_tokens "
+            f"({request.max_new_tokens}) exceeds max_len {max_len}")
+    if request.uid in seen_uids:
+        raise ValueError(f"request uid {request.uid} already submitted "
+                         "(results are keyed by uid)")
+
+
+def _params_prepared(params: Any) -> bool:
     return any(isinstance(l, ops.QuantizedWeight) for l in jax.tree.leaves(
         params, is_leaf=lambda x: isinstance(x, ops.QuantizedWeight)))
 
 
-def _ensure_prepared(params, rt: Runtime, model: LM, packed: bool):
+def _ensure_prepared(params: Any, rt: Runtime, model: LM,
+                     packed: bool) -> Tuple[Any, List[str]]:
     """Weight preload shared by both engines: prepare the plane pytree once
     at construction unless the caller already did.  Returns (params, paths
     of QuantizedWeight leaves).  A Runtime carrying a PrecisionSchedule gets
@@ -168,7 +209,10 @@ class EngineStats:
     occupied slot (``decode_steps_by_tier``), while ``tokens_by_tier``
     counts only each tier's own active slot-steps.  ``tier_switches`` only
     moves in tier-serialized mode (mixed batches never switch);
-    ``mixed_tier_chunks`` counts dispatches whose batch held >= 2 tiers."""
+    ``mixed_tier_chunks`` counts dispatches whose batch held >= 2 tiers.
+    ``tier_migrations`` counts successful mid-stream ``set_tier`` calls on
+    RUNNING requests; ``kv_migrations`` counts the subset that requantized
+    a live KV lane (the tiers mapped to different KV precisions)."""
 
     prefills: int = 0
     prefill_tokens: int = 0        # real (unpadded) prompt tokens prefilled
@@ -178,28 +222,87 @@ class EngineStats:
     decode_idle_slot_steps: int = 0  # masked-out slot-steps (waste bound)
     tier_switches: int = 0         # decode-phase precision changes (serialized)
     mixed_tier_chunks: int = 0     # chunks serving >= 2 tiers in one batch
+    tier_migrations: int = 0       # mid-stream set_tier on RUNNING requests
+    kv_migrations: int = 0         # ... of which requantized a live KV lane
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
-class ServeEngine:
+class _DeferredErrors:
+    """Shared callback-error deferral: a raising user ``on_token`` callback
+    must not abort a scheduling round midway (that would desync host slot
+    bookkeeping from the already-advanced device state).  Engines route
+    callback exceptions here (``RequestHandle._push(defer=...)``) and
+    re-raise the FIRST one at the end of the round via
+    :meth:`_raise_deferred` — engine-internal errors are never captured
+    and propagate immediately."""
+
+    _deferred_error: Optional[BaseException] = None
+
+    def _defer_error(self, err: BaseException) -> None:
+        if self._deferred_error is None:
+            self._deferred_error = err
+
+    def _raise_deferred(self) -> None:
+        """Re-raise the first callback error of the round, once the
+        round's host bookkeeping is complete and consistent."""
+        if self._deferred_error is not None:
+            err, self._deferred_error = self._deferred_error, None
+            raise err
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The serving surface both engines implement (see module docstring).
+
+    ``submit`` validates + enqueues one request and returns its streaming
+    handle; ``step`` runs one scheduling round and returns the tokens it
+    emitted; ``drain`` steps until idle and returns every finished
+    request's tokens; ``run`` is the blocking compatibility wrapper
+    (submit all, drain, collect — token-identical to the historical API).
+    ``clock`` is the deterministic scheduler clock (decode steps executed)
+    every submission time, queue wait and ``Request.deadline`` is priced
+    in."""
+
+    def submit(self, request: Request) -> RequestHandle: ...
+
+    def step(self) -> List[TokenEvent]: ...
+
+    def drain(self) -> Dict[int, List[int]]: ...
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]: ...
+
+    def retire(self, uid: int) -> List[int]: ...
+
+    @property
+    def has_work(self) -> bool: ...
+
+    @property
+    def clock(self) -> float: ...
+
+
+class ServeEngine(_DeferredErrors):
     """Continuous batching over ``max_batch`` persistent slots.
 
-    Accepts a request stream (``submit`` any time, or ``run`` a list);
-    freed slots are re-prefilled individually against the shared cache
-    arena while the other slots' caches stay untouched, and the decode
-    inner loop is a single jitted multi-step scan (``decode_chunk`` steps
-    per dispatch) with per-slot active masking.
+    Accepts a request stream (``submit`` any time; ``run`` a list for the
+    blocking form); freed slots are re-prefilled individually against the
+    shared cache arena while the other slots' caches stay untouched, and
+    the decode inner loop is a single jitted multi-step scan
+    (``decode_chunk`` steps per dispatch) with per-slot active masking.
+
+    ``scheduler_policy`` picks WHICH waiting request takes a freed slot
+    (``FIFOPolicy`` default; ``SLOPolicy`` for deadline-aware admission).
 
     With a ``PrecisionSchedule`` on the runtime, ``mixed_tiers`` selects the
-    admission policy:
+    admission shape:
 
-    * ``True`` (default) — tier-tagged slots: any free slot takes the FIFO
-      head regardless of tier, and each decode chunk runs the occupied
-      tiers TOGETHER via the per-row-group matmul path (a static
+    * ``True`` (default) — tier-tagged slots: any free slot takes the
+      policy's pick regardless of tier, and each decode chunk runs the
+      occupied tiers TOGETHER via the per-row-group matmul path (a static
       ``(tier, rows)`` layout + a traced slot permutation, derived from
-      ``SlotArena.tiers`` each step).
+      ``SlotArena.tiers`` each step).  Only this mode supports mid-stream
+      ``RequestHandle.set_tier`` on RUNNING requests.
     * ``False`` — the tier-serialized baseline: a decode batch runs at ONE
       tier and admission is restricted to matching requests (kept for the
       ``serve_mixed_tiers`` benchmark comparison).
@@ -209,10 +312,12 @@ class ServeEngine:
     static; everything that varies per request flows through traced
     arrays."""
 
-    def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
-                 max_len: int = 512, kv_bits: Optional[int] = None,
-                 decode_chunk: int = 8, prompt_bucket: int = 8,
-                 packed: bool = False, mixed_tiers: bool = True):
+    def __init__(self, model: LM, params: Any, rt: Runtime, *,
+                 max_batch: int = 8, max_len: int = 512,
+                 kv_bits: Optional[int] = None, decode_chunk: int = 8,
+                 prompt_bucket: int = 8, packed: bool = False,
+                 mixed_tiers: bool = True,
+                 scheduler_policy: Optional[SchedulerPolicy] = None) -> None:
         self.model = model
         self.rt = rt
         self.max_batch = max_batch
@@ -236,7 +341,7 @@ class ServeEngine:
         # KV arena mode: a schedule with kv_tiers gets the mixed per-slot
         # arena (one byte-lane store serving every declared KV precision);
         # otherwise the engine-wide kv_bits applies to all slots.
-        arena_kv = kv_bits
+        arena_kv: Any = kv_bits
         self._mixed_kv = False
         if self.schedule is not None and self.schedule.kv_tiers is not None:
             if kv_bits is not None:
@@ -247,16 +352,19 @@ class ServeEngine:
             self._mixed_kv = True
         self.arena = slots_lib.SlotArena(model, max_batch, max_len,
                                          kv_bits=arena_kv)
-        self.scheduler = Scheduler(max_batch)
+        self.scheduler = Scheduler(max_batch, policy=scheduler_policy)
         self.stats = EngineStats()
-        self._seen_uids: set = set()
+        self.handles: Dict[int, RequestHandle] = {}
+        self._seen_uids: Set[int] = set()
         # Host-mirrored per-slot decode state.
-        self._tok = np.zeros((max_batch,), np.int32)
-        self._remaining = np.zeros((max_batch,), np.int32)
+        self._tok: npt.NDArray[np.int32] = np.zeros((max_batch,), np.int32)
+        self._remaining: npt.NDArray[np.int32] = np.zeros((max_batch,),
+                                                          np.int32)
         mixed_kv = self._mixed_kv
 
-        def prefill_slot(params, caches, slot, tokens, length, kv_code,
-                         tier=None):
+        def prefill_slot(params: Any, caches: Any, slot: Any, tokens: Any,
+                         length: Any, kv_code: Any,
+                         tier: Optional[str] = None) -> Tuple[Any, Any]:
             """Admit one request: reset slot, prefill its prompt (right-
             padded to a bucket), write the batch-1 cache back into the
             arena.  ``tier`` is STATIC (retraces only per prompt bucket x
@@ -274,8 +382,10 @@ class ServeEngine:
             tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
             return tok, caches
 
-        def decode_chunk_fn(params, caches, tok, remaining, perm, n_steps,
-                            tier=None, groups=None):
+        def decode_chunk_fn(params: Any, caches: Any, tok: Any,
+                            remaining: Any, perm: Any, n_steps: int,
+                            tier: Optional[str] = None,
+                            groups: Optional[GroupLayout] = None) -> Any:
             """The single jitted inner loop: ``n_steps`` decode steps as one
             lax.scan with an active mask.  A slot's budget hitting zero
             freezes its cache (masked writes) THAT step; its lane still
@@ -293,7 +403,7 @@ class ServeEngine:
             else:
                 rt_eff = self.rt.for_tier(tier)
 
-            def step(carry, _):
+            def step(carry: Any, _: Any) -> Any:
                 tok, caches, remaining = carry
                 active = remaining > 0
                 logits, caches = self.model.decode_step(
@@ -313,26 +423,31 @@ class ServeEngine:
         self._decode_chunk = jax.jit(decode_chunk_fn,
                                      static_argnames=("n_steps", "tier",
                                                       "groups"))
+        # Mid-stream KV migration: one jitted requantize serves every
+        # (slot, from-tier, to-tier) combination — slot and code are traced.
+        self._migrate_kv = jax.jit(slots_lib.migrate_kv_tier)
+
+    # ------------------------------------------------------------------ clock
+    @property
+    def clock(self) -> float:
+        """Deterministic scheduler clock: decode steps executed so far.
+        Submission times, queue waits and ``Request.deadline`` are priced
+        in these ticks."""
+        return float(self.stats.decode_steps)
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything waits or decodes."""
+        return self.scheduler.has_work
 
     # ----------------------------------------------------------------- intake
-    def submit(self, request: Request) -> None:
-        """Queue one request (host-side; validates against engine limits).
+    def submit(self, request: Request) -> RequestHandle:
+        """Queue one request; returns its streaming :class:`RequestHandle`.
 
-        On a tiered engine the queued copy always carries a concrete tier
-        name (the schedule's default when the caller left it None)."""
-        plen = len(request.prompt)
-        if plen == 0:
-            raise ValueError(f"request {request.uid}: empty prompt")
-        if request.max_new_tokens < 1:
-            raise ValueError(f"request {request.uid}: max_new_tokens must be "
-                             f">= 1, got {request.max_new_tokens}")
-        if plen + request.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"request {request.uid}: prompt ({plen}) + max_new_tokens "
-                f"({request.max_new_tokens}) exceeds max_len {self.max_len}")
-        if request.uid in self._seen_uids:
-            raise ValueError(f"request uid {request.uid} already submitted "
-                             "(results are keyed by uid)")
+        Host-side: validates against engine limits.  On a tiered engine the
+        queued copy always carries a concrete tier name (the schedule's
+        default when the caller left it None)."""
+        _validate_request(request, self.max_len, self._seen_uids)
         if self.schedule is None:
             if request.tier is not None:
                 raise ValueError(
@@ -349,9 +464,59 @@ class ServeEngine:
             request = dataclasses.replace(
                 request, tier=request.tier or self.schedule.default_tier)
         self._seen_uids.add(request.uid)
-        self.scheduler.submit(request)
+        handle = RequestHandle(request, self, submitted_at=self.clock)
+        self.handles[request.uid] = handle
+        # Handle and scheduler share the SAME (normalized) Request object,
+        # so a QUEUED set_tier re-tags the queue entry in place.
+        self.scheduler.submit(request, now=self.clock)
+        return handle
 
-    def _bucket_pad(self, prompt: np.ndarray):
+    # -------------------------------------------------------------- migration
+    def _set_tier(self, handle: RequestHandle, tier: str) -> None:
+        """Move one request to another tier (``RequestHandle.set_tier``).
+
+        QUEUED: re-tag the waiting request (it re-prices for SLO admission
+        and prefills at the new tier).  RUNNING (mixed-tier mode only): if
+        the tiers map to different KV precisions, requantize the slot's
+        live KV lane in place (jitted; bit-identical to quantizing the
+        slot's dequantized cache directly at the target precision), then
+        re-tag the slot — the weight plane prefix switches at the next
+        group-layout derivation.  FINISHED: error."""
+        if self.schedule is None:
+            raise ValueError("set_tier needs an engine with a "
+                             "PrecisionSchedule")
+        if tier not in self.schedule.tiers:
+            raise ValueError(f"unknown tier {tier!r}; engine serves "
+                             f"{sorted(self.schedule.tiers)}")
+        if handle.status is RequestStatus.FINISHED:
+            raise RuntimeError(f"request {handle.uid} already finished; "
+                               "cannot migrate its tier")
+        old = handle.request.tier
+        if tier == old:
+            return
+        if handle.status is RequestStatus.QUEUED:
+            handle.request.tier = tier      # shared with the queue entry
+            return
+        # RUNNING: live-slot migration.
+        if not self.mixed_tiers:
+            raise RuntimeError(
+                "mid-stream tier migration needs mixed_tiers=True (a "
+                "serialized decode batch runs one tier at a time)")
+        slot = handle.slot
+        assert slot is not None
+        if self._mixed_kv:
+            new_code = self.schedule.kv_code_for(tier)
+            if new_code != self.schedule.kv_code_for(old):
+                self.arena.caches = self._migrate_kv(
+                    self.arena.caches, jnp.int32(slot), jnp.int32(new_code))
+                self.stats.kv_migrations += 1
+        handle.request.tier = tier          # shared with the SlotState
+        self.arena.tiers[slot] = tier
+        self.stats.tier_migrations += 1
+
+    # ------------------------------------------------------------- scheduling
+    def _bucket_pad(self,
+                    prompt: npt.NDArray[np.int32]) -> Tuple[Any, int]:
         """Right-pad to the next bucket multiple (few jit retraces)."""
         plen = len(prompt)
         bucket = -(-plen // self.prompt_bucket) * self.prompt_bucket
@@ -360,24 +525,48 @@ class ServeEngine:
         padded[0, :plen] = prompt
         return padded, plen
 
-    def _admit_free_slots(self) -> None:
+    def _emit_token(self, state: Any, token: int,
+                    tier: Optional[str]) -> TokenEvent:
+        """Record one emitted token on slot state + handle; returns the
+        event.  ``final`` fires on the request's last owed token and flips
+        its handle to FINISHED.
+
+        ``tier`` is the tier the token was DECODED at (snapshotted at
+        dispatch): a ``set_tier`` issued from an on_token callback
+        mid-round must not relabel the round's remaining, already-computed
+        tokens.  A callback that raises is deferred to the end of the
+        round (``_raise_deferred``) so slot bookkeeping stays in sync with
+        the device state."""
+        index = len(state.tokens)
+        state.emit(token)
+        event = TokenEvent(uid=state.uid, token=token, index=index,
+                           tier=tier, final=state.done)
+        self.handles[state.uid]._push(event, self.clock,
+                                      defer=self._defer_error)
+        return event
+
+    def _admit_free_slots(self) -> List[TokenEvent]:
         """Fill free slots from the waiting queue and prefill each admitted
-        request individually (mixed-tier mode: plain FIFO into ANY slot;
-        serialized mode: only requests matching the active tier)."""
+        request individually (mixed-tier mode: the policy's pick into ANY
+        slot; serialized mode: only requests matching the active tier).
+        Returns the prefill-emitted first tokens as events."""
+        events: List[TokenEvent] = []
         for slot in self.scheduler.free_slots():
             if self.schedule is None or self.mixed_tiers:
-                req = self.scheduler.admit(slot)
+                req = self.scheduler.admit(slot, now=self.clock)
             else:
                 if self._active_tier is None:
-                    # Idle decode batch: the oldest waiting request picks
-                    # the next tier (FIFO across tier groups).
-                    nxt = self.scheduler.next_tier()
-                    if nxt is None:
+                    # Idle decode batch: the policy's next pick chooses the
+                    # next tier (FIFO across tier groups by default).
+                    pick = self.scheduler.peek(now=self.clock)
+                    if pick is None:
                         break
+                    nxt = pick.tier
                     if self.stats.decode_chunks:
                         self.stats.tier_switches += nxt != self._last_tier
                     self._active_tier = nxt
-                req = self.scheduler.admit(slot, tier=self._active_tier)
+                req = self.scheduler.admit(slot, tier=self._active_tier,
+                                           now=self.clock)
             if req is None:
                 break
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
@@ -392,16 +581,20 @@ class ServeEngine:
             self.stats.prefill_tokens += plen
             first = int(tok)
             state = self.scheduler.slots[slot]
-            state.emit(first)                     # token 1 of max_new
+            assert state is not None
+            self.handles[req.uid]._mark_admitted(slot, self.clock)
+            events.append(self._emit_token(state, first,
+                                           req.tier))  # token 1 of max_new
             self._tok[slot] = first
             self._remaining[slot] = state.remaining
+        return events
 
     def _release_done(self) -> None:
         """Release exhausted slots and clear their arena tier tags."""
         for slot in self.scheduler.release_done():
             self.arena.tiers[slot] = None
 
-    def _group_layout(self):
+    def _group_layout(self) -> Tuple[GroupLayout, npt.NDArray[np.int32]]:
         """Derive the per-step mixed-tier layout from the slot tier tags.
 
         Returns ``(groups, perm)``: ``groups`` is the jit-STATIC tuple of
@@ -410,8 +603,10 @@ class ServeEngine:
         the TRACED int32 [B] slot order realizing it.  The jit key space is
         the set of tier multisets over ``max_batch`` slots, not the set of
         slot assignments."""
-        rank = {t: i for i, t in enumerate(self.schedule.tier_names)}
-        default = self.schedule.default_tier
+        schedule = self.schedule
+        assert schedule is not None
+        rank = {t: i for i, t in enumerate(schedule.tier_names)}
+        default = schedule.default_tier
         slot_tiers = [t if t is not None else default
                       for t in self.arena.tiers]
         order = sorted(range(self.max_batch),
@@ -427,25 +622,29 @@ class ServeEngine:
                 np.asarray(order, np.int32))
 
     # ------------------------------------------------------------------- run
-    def step(self) -> None:
+    def step(self) -> List[TokenEvent]:
         """One scheduling round: admit into free slots, then run one jitted
         decode chunk (serving the occupied slots' tiers together in mixed
         mode, or the single active tier in serialized mode) and account its
-        tokens."""
+        tokens.  Returns every token emitted this round (prefill first
+        tokens + decode tokens, in emission order); an idle engine returns
+        ``[]`` without dispatching anything."""
         if self.schedule is not None and not self.mixed_tiers:
             if not self.scheduler.occupied():
                 if self._active_tier is not None:  # keep across idle steps
                     self._last_tier = self._active_tier
                 self._active_tier = None           # batch drained: re-tier
-        self._admit_free_slots()
+        events = self._admit_free_slots()
         self._release_done()                       # max_new_tokens == 1 cases
         occupied = self.scheduler.occupied()
         if not occupied:
-            return
+            self._raise_deferred()
+            return events
         # Trim the chunk so a tail of all-finished steps is never dispatched
         # (keyed per distinct length: at most decode_chunk jit entries).
         n_steps = int(min(self.decode_chunk,
                           max(s.remaining for _, s in occupied)))
+        groups: Optional[GroupLayout]
         if self.schedule is not None and self.mixed_tiers:
             groups, perm = self._group_layout()
             tier = None
@@ -472,61 +671,121 @@ class ServeEngine:
                 else {tier}
             self.stats.mixed_tier_chunks += len(occupied_tiers) > 1
             for t in occupied_tiers:
+                assert t is not None    # tiered engines tag occupied slots
                 by_tier = self.stats.decode_steps_by_tier
                 by_tier[t] = by_tier.get(t, 0) + n_steps
             tk = self.stats.tokens_by_tier
             for slot, _ in occupied:
                 t = self.arena.tiers[slot] if self.mixed_tiers else tier
+                assert t is not None
                 tk[t] = tk.get(t, 0) + int(actives[:, slot].sum())
-        for slot, state in occupied:
-            for s in range(n_steps):
+        # Emission in true stream order (step-major): per-request order is
+        # identical to the historical slot-major loop.  Event tiers are the
+        # tiers the chunk DISPATCHED at (a set_tier from a callback must
+        # not relabel tokens already computed at the old width).
+        if self.schedule is None:
+            etier: Dict[int, Optional[str]] = {s_: None for s_, _ in occupied}
+        elif self.mixed_tiers:
+            etier = {s_: self.arena.tiers[s_] for s_, _ in occupied}
+        else:
+            etier = {s_: tier for s_, _ in occupied}
+        for s in range(n_steps):
+            for slot, state in occupied:
                 if actives[s, slot]:
-                    state.emit(int(toks[s, slot]))
+                    events.append(self._emit_token(state, int(toks[s, slot]),
+                                                   etier[slot]))
         self._release_done()
+        self._raise_deferred()
+        return events
 
-    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve a request list to completion (streaming entrypoint:
-        ``submit`` + repeated ``step`` + ``results``)."""
+    def drain(self) -> Dict[int, List[int]]:
+        """Step until idle; returns {uid: tokens} for every finished
+        request (the streaming loop's terminal collect)."""
+        while self.has_work:
+            self.step()
+        return dict(self.scheduler.finished)
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
+        """Blocking compatibility wrapper over the incremental core:
+        submit every request, drain, collect — token-identical to the
+        historical batch API."""
         for r in requests:
             self.submit(r)
-        while self.scheduler.has_work:
-            self.step()
-        return {uid: self.scheduler.finished[uid]
-                for uid in (r.uid for r in requests)}
+        finished = self.drain()
+        return {uid: finished[uid] for uid in (r.uid for r in requests)}
+
+    def retire(self, uid: int) -> List[int]:
+        """Drop a FINISHED request's host state — its handle (buffered
+        events + tokens), its results entry, and its uid reservation — and
+        return the tokens.
+
+        This is the long-running server's bound on per-request host
+        memory: handles and finished-token lists otherwise live for the
+        engine's lifetime.  A retired uid may be submitted again."""
+        handle = self.handles.get(uid)
+        if handle is None:
+            raise KeyError(f"unknown uid {uid}")
+        if not handle.done:
+            raise RuntimeError(f"request {uid} is {handle.status.value}; "
+                               "only FINISHED requests can be retired")
+        del self.handles[uid]
+        self._seen_uids.discard(uid)
+        return self.scheduler.finished.pop(uid)
 
     @property
     def results(self) -> Dict[int, List[int]]:
         return dict(self.scheduler.finished)
 
 
-class BatchServeEngine:
+@dataclasses.dataclass
+class _BatchState:
+    """Host state of the batch the reference engine currently decodes."""
+
+    batch: List[Request]
+    caches: Any
+    tok: Any                      # [B] int32 device array
+    outs: List[List[int]]
+    step_idx: int
+    max_new: int
+
+
+class BatchServeEngine(_DeferredErrors):
     """Reference batch-at-a-time baseline (the seed's scheduling): admit up
     to ``max_batch`` requests, prefill them together, decode EVERY slot for
     the batch-wide ``max_new_tokens``, then refill the whole batch.
 
-    Kept for parity tests and benchmarks: its outputs are exact per request
-    (right-padded prefill with per-row true lengths), but finished slots
-    keep burning decode steps until the batch max — the waste the
-    continuous-batching engine eliminates.
+    Implements the same incremental ``submit`` / ``step`` / ``drain``
+    surface as :class:`ServeEngine` (one ``step`` = one batch-wide decode
+    step, starting a new batch when idle), with ``run`` as the blocking
+    wrapper — so the :class:`Engine` protocol covers both.  Kept for parity
+    tests and benchmarks: its outputs are exact per request (right-padded
+    prefill with per-row true lengths), but finished slots keep burning
+    decode steps until the batch max — the waste the continuous-batching
+    engine eliminates.
 
     On a tiered runtime the baseline runs EVERY request at ONE fixed tier
     (``tier`` pins it; the schedule's default otherwise) — it has no
-    per-request switching.  Its KV cache follows that tier's ``kv_tiers``
+    per-request switching, and ``RequestHandle.set_tier`` on its handles
+    always raises.  Its KV cache follows that tier's ``kv_tiers``
     precision when the schedule declares one (and ``kv_bits`` was left
     None), which makes it the fixed-precision reference for the mixed
     per-slot KV arena."""
 
-    def __init__(self, model: LM, params, rt: Runtime, *, max_batch: int = 8,
-                 max_len: int = 512, kv_bits: Optional[int] = None,
-                 packed: bool = False, tier: Optional[str] = None):
+    def __init__(self, model: LM, params: Any, rt: Runtime, *,
+                 max_batch: int = 8, max_len: int = 512,
+                 kv_bits: Optional[int] = None, packed: bool = False,
+                 tier: Optional[str] = None) -> None:
         self.model = model
         if rt.schedule is not None and tier is not None \
                 and tier not in rt.schedule.tiers:
             raise ValueError(f"unknown tier {tier!r}; engine serves "
                              f"{sorted(rt.schedule.tiers)}")
+        self.tier_name: Optional[str] = None
         if rt.schedule is not None:
             if kv_bits is None:
                 kv_bits = rt.schedule.kv_bits_for(tier)
+            self.tier_name = tier if tier is not None \
+                else rt.schedule.default_tier
             rt = rt.for_tier(tier)
         self.rt = rt
         self.params, _ = _ensure_prepared(params, rt, model, packed)
@@ -534,34 +793,52 @@ class BatchServeEngine:
         self.max_len = max_len
         self.kv_bits = kv_bits
         self.stats = EngineStats()
+        self.handles: Dict[int, RequestHandle] = {}
+        self.results: Dict[int, List[int]] = {}
+        self._queue: List[Request] = []
+        self._seen_uids: Set[int] = set()
+        self._active: Optional[_BatchState] = None
         self._prefill = jax.jit(
             lambda p, c, t, ln: model.prefill(p, rt, c, tokens=t,
                                               seq_lengths=ln))
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, rt, c, tokens=t))
 
-    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve the list batch-at-a-time; returns {uid: tokens}."""
-        for r in requests:   # same admission contract as ServeEngine.submit
-            if len(r.prompt) == 0:
-                raise ValueError(f"request {r.uid}: empty prompt")
-            if r.max_new_tokens < 1:
-                raise ValueError(f"request {r.uid}: max_new_tokens must be "
-                                 f">= 1, got {r.max_new_tokens}")
-            if len(r.prompt) + r.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request {r.uid}: prompt ({len(r.prompt)}) + "
-                    f"max_new_tokens ({r.max_new_tokens}) exceeds max_len "
-                    f"{self.max_len}")
-        results: Dict[int, List[int]] = {}
-        queue = list(requests)
-        while queue:
-            batch = queue[: self.max_batch]
-            queue = queue[self.max_batch:]
-            results.update(self._run_batch(batch))
-        return results
+    # ------------------------------------------------------------------ clock
+    @property
+    def clock(self) -> float:
+        """Scheduler clock: decode steps executed (same units as
+        ServeEngine's)."""
+        return float(self.stats.decode_steps)
 
-    def _run_batch(self, batch: List[Request]) -> Dict[int, List[int]]:
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or self._active is not None
+
+    # ----------------------------------------------------------------- intake
+    def submit(self, request: Request) -> RequestHandle:
+        """Queue one request (same admission contract as ServeEngine —
+        :func:`_validate_request`); returns its handle.  Batches form in
+        submission order, ``max_batch`` at a time, whenever ``step`` finds
+        no active batch."""
+        _validate_request(request, self.max_len, self._seen_uids)
+        self._seen_uids.add(request.uid)
+        handle = RequestHandle(request, self, submitted_at=self.clock)
+        self.handles[request.uid] = handle
+        self._queue.append(request)
+        return handle
+
+    def _set_tier(self, handle: RequestHandle, tier: str) -> None:
+        raise RuntimeError(
+            "BatchServeEngine pins one tier for every request; per-request "
+            "tier migration needs ServeEngine (mixed_tiers=True)")
+
+    # ------------------------------------------------------------------- run
+    def _start_batch(self) -> None:
+        """Form + prefill the next batch (up to ``max_batch`` requests in
+        submission order)."""
+        batch = self._queue[: self.max_batch]
+        self._queue = self._queue[self.max_batch:]
         b = len(batch)
         plen = max(len(r.prompt) for r in batch)
         prompts = np.zeros((b, plen), np.int32)
@@ -575,16 +852,80 @@ class BatchServeEngine:
                                        jnp.asarray(lengths))
         self.stats.prefills += b
         self.stats.prefill_tokens += int(lengths.sum())
-        max_new = max(r.max_new_tokens for r in batch)
-        outs = [[] for _ in range(b)]
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for step in range(max_new):
-            for i, r in enumerate(batch):
-                if step < r.max_new_tokens:
-                    outs[i].append(int(tok[i]))
-            logits, caches = self._decode(self.params, caches, tok[:, None])
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            self.stats.decode_steps += 1
-            self.stats.decode_slot_steps += b
-        return {r.uid: outs[i][: r.max_new_tokens]
-                for i, r in enumerate(batch)}
+        for i, r in enumerate(batch):
+            self.handles[r.uid]._mark_admitted(i, self.clock)
+        self._active = _BatchState(
+            batch=batch, caches=caches, tok=tok,
+            outs=[[] for _ in range(b)], step_idx=0,
+            max_new=max(r.max_new_tokens for r in batch))
+
+    def step(self) -> List[TokenEvent]:
+        """One batch-wide decode step (starting a new batch when idle):
+        emit the current token for every request still owed one, then
+        advance the whole batch — finished slots keep burning decode work
+        until the batch max (the baseline's defining waste).  Returns the
+        emitted tokens; ``[]`` when fully idle."""
+        if self._active is None:
+            if not self._queue:
+                return []
+            self._start_batch()
+        a = self._active
+        assert a is not None
+        events: List[TokenEvent] = []
+        for i, r in enumerate(a.batch):
+            if a.step_idx < r.max_new_tokens:
+                token = int(a.tok[i])
+                a.outs[i].append(token)
+                event = TokenEvent(uid=r.uid, token=token, index=a.step_idx,
+                                   tier=self.tier_name,
+                                   final=a.step_idx == r.max_new_tokens - 1)
+                events.append(event)
+                self.handles[r.uid]._push(event, self.clock,
+                                          defer=self._defer_error)
+        logits, a.caches = self._decode(self.params, a.caches, a.tok[:, None])
+        a.tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.stats.decode_steps += 1
+        self.stats.decode_slot_steps += len(a.batch)
+        a.step_idx += 1
+        if a.step_idx >= a.max_new:
+            for i, r in enumerate(a.batch):
+                self.results[r.uid] = a.outs[i][: r.max_new_tokens]
+            self._active = None
+        self._raise_deferred()
+        return events
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Step until idle; returns {uid: tokens} for finished requests."""
+        while self.has_work:
+            self.step()
+        return dict(self.results)
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
+        """Serve the list batch-at-a-time (blocking wrapper over
+        submit/step/drain); returns {uid: tokens}.
+
+        Validation is all-or-nothing (the historical contract): a bad
+        request anywhere in the list raises before ANY of them is queued
+        or its uid burned."""
+        seen = set(self._seen_uids)
+        for r in requests:
+            _validate_request(r, self.max_len, seen)
+            seen.add(r.uid)
+        for r in requests:
+            self.submit(r)
+        finished = self.drain()
+        return {r.uid: finished[r.uid] for r in requests}
+
+    def retire(self, uid: int) -> List[int]:
+        """Drop a FINISHED request's host state and release its uid (same
+        contract as :meth:`ServeEngine.retire`)."""
+        handle = self.handles.get(uid)
+        if handle is None:
+            raise KeyError(f"unknown uid {uid}")
+        if not handle.done:
+            raise RuntimeError(f"request {uid} is {handle.status.value}; "
+                               "only FINISHED requests can be retired")
+        del self.handles[uid]
+        self._seen_uids.discard(uid)
+        return self.results.pop(uid)

@@ -1,9 +1,11 @@
-"""Serving request type (shared by scheduler and engine)."""
+"""Serving request type (shared by scheduler, handles and engines)."""
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
+import numpy.typing as npt
 
 
 @dataclasses.dataclass
@@ -16,10 +18,19 @@ class Request:
     None on untiered engines).  The engine normalizes it onto a queued copy
     at submit time, and the tier drives BOTH the slot's weight plane-prefix
     width and — when the schedule declares ``kv_tiers`` — the slot's
-    KV-cache storage precision."""
+    KV-cache storage precision.  A live request's tier can later be changed
+    through its :class:`~repro.serve.handle.RequestHandle` (``set_tier``),
+    which migrates the slot's KV lane in place.
+
+    ``deadline`` is the request's SLO budget, measured in the engine's
+    scheduler clock (decode steps) FROM SUBMISSION: the request should
+    finish within ``deadline`` clock ticks of being submitted.  None means
+    best-effort.  Only :class:`~repro.serve.scheduler.SLOPolicy` consults
+    it; the default FIFO admission ignores deadlines entirely."""
 
     uid: int
-    prompt: np.ndarray           # [S] int32
-    max_new_tokens: int = 16     # total tokens returned (>= 1; results come
-                                 # from ServeEngine.run / .results)
-    tier: str = None             # precision tier name (see class docstring)
+    prompt: npt.NDArray[np.int32]  # [S] int32
+    max_new_tokens: int = 16       # total tokens returned (>= 1; stream via
+                                   # the RequestHandle, or Engine.run)
+    tier: Optional[str] = None     # precision tier name (see class docstring)
+    deadline: Optional[float] = None   # SLO budget in scheduler-clock ticks

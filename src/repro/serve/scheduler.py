@@ -1,24 +1,42 @@
-"""Host-side admission scheduler for slot-based continuous batching.
+"""Host-side admission scheduling for slot-based continuous batching.
 
 Pure bookkeeping, no JAX (everything here is host state; nothing is traced):
-a FIFO waiting queue plus per-slot state (which request occupies the slot,
-tokens emitted so far, decode budget remaining).  The engine asks for free
-slots after every decode chunk and admits waiting requests into them —
-occupied slots are never re-prefilled.
+a waiting queue plus per-slot state (which request occupies the slot, tokens
+emitted so far, decode budget remaining).  The engine asks for free slots
+after every decode chunk and admits waiting requests into them — occupied
+slots are never re-prefilled.
 
-Precision-tiered serving (``Request.tier``): the default engine admits
-MIXED tiers — any free slot takes the FIFO head and the decode batch serves
-the occupied tiers together via per-row-group matmuls, so admission here is
-plain ``admit(slot)``.  The tier-constrained form (``admit(slot, tier=...)``
-— FIFO within a tier, requests of other tiers keep their queue position) is
-what the tier-SERIALIZED baseline mode uses, where a decode batch runs at
-one precision at a time.
+Admission *policy* — which waiting request takes a freed slot — is
+pluggable via the :class:`SchedulerPolicy` protocol:
+
+* :class:`FIFOPolicy` (default) reproduces the historical behaviour
+  bit-identically: the oldest compatible request wins.
+* :class:`SLOPolicy` is deadline-aware: it weighs each candidate's slack
+  (``Request.deadline`` vs. queue age) against an estimated service time
+  priced by the hwmodel's per-tier cycle cost
+  (``hwmodel.energy.tier_cost``), admitting the tightest-slack request
+  first (earliest-deadline-first with a service-time estimate).  Requests
+  without a deadline are best-effort: they fall back to FIFO order among
+  themselves and yield to any deadlined candidate.
+
+Tier *constraints* are orthogonal to policy: the mixed-tier engine admits
+any tier into any slot (``admit(slot)``), while the tier-SERIALIZED
+baseline constrains admission to the one tier its decode batch currently
+runs at (``admit(slot, tier=...)`` — other tiers keep their queue
+position).  The policy then chooses among the constraint-compatible
+candidates.
+
+All clocks (``now`` / ``submitted_at`` / deadlines) are in the engine's
+scheduler-clock units — decode steps executed — so scheduling is fully
+deterministic and host-wall-clock free.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import (Deque, Dict, List, Mapping, Optional, Protocol, Sequence,
+                    Tuple, Union)
 
 from repro.serve.request import Request
 
@@ -45,57 +63,179 @@ class SlotState:
         return self.remaining <= 0
 
 
-ANY_TIER = object()   # admit() sentinel: no tier constraint (strict FIFO)
+class _AnyTier:
+    """Sentinel type for ``admit(tier=ANY_TIER)`` (no tier constraint)."""
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging nicety
+        return "ANY_TIER"
+
+
+ANY_TIER = _AnyTier()   # admit()/peek() sentinel: no tier constraint
+TierFilter = Union[str, None, _AnyTier]
+
+
+class SchedulerPolicy(Protocol):
+    """Admission policy: pick which waiting request takes a freed slot.
+
+    ``candidates`` is the tier-constraint-compatible subset of the waiting
+    queue IN QUEUE (submission) ORDER; ``submitted_at`` maps uid -> the
+    scheduler-clock tick the request was submitted at; ``now`` is the
+    current scheduler clock.  Return an index into ``candidates`` (None
+    only when it is empty).  Policies are pure host-side functions of the
+    queue — they never touch traced state."""
+
+    def select(self, candidates: Sequence[Request],
+               submitted_at: Mapping[int, float],
+               now: float) -> Optional[int]: ...
+
+
+class FIFOPolicy:
+    """Strict first-in-first-out admission (the historical default):
+    the oldest compatible request takes the slot."""
+
+    def select(self, candidates: Sequence[Request],
+               submitted_at: Mapping[int, float],
+               now: float) -> Optional[int]:
+        return 0 if candidates else None
+
+
+class SLOPolicy:
+    """Deadline-aware admission: earliest effective deadline first.
+
+    Each candidate is scored by its *slack*::
+
+        slack = (submitted_at + deadline) - now - est_service
+        est_service = max_new_tokens * cost(tier)
+
+    where ``cost(tier)`` is the tier's relative per-token service cost
+    derived from the hwmodel's cycle model
+    (:func:`repro.hwmodel.energy.relative_tier_costs`: cycles/MAC,
+    normalized so the cheapest tier costs 1.0) — a high-precision request
+    occupies the modeled array longer per token, so its deadline bites
+    earlier.  The tightest-slack candidate wins; ties break FIFO.
+    Deadline-less requests have infinite slack (best-effort): they keep
+    FIFO order among themselves and always yield to deadlined candidates.
+
+    ``tier_costs`` can be passed directly (tier name -> relative cost) or
+    derived from a :class:`~repro.core.policy.PrecisionSchedule`; untiered
+    requests (tier None) cost ``default_cost``."""
+
+    def __init__(self, schedule: Optional[object] = None, *,
+                 tier_costs: Optional[Dict[str, float]] = None,
+                 default_cost: float = 1.0) -> None:
+        if tier_costs is None and schedule is not None:
+            from repro.hwmodel.energy import relative_tier_costs
+            tier_costs = relative_tier_costs(schedule)
+        self.tier_costs: Dict[str, float] = dict(tier_costs or {})
+        self.default_cost = float(default_cost)
+
+    def cost(self, tier: Optional[str]) -> float:
+        """Relative per-token service cost of a tier (cheapest == 1.0)."""
+        if tier is None:
+            return self.default_cost
+        return self.tier_costs.get(tier, self.default_cost)
+
+    def est_service(self, request: Request) -> float:
+        """Estimated service time of a request in scheduler-clock ticks."""
+        return request.max_new_tokens * self.cost(request.tier)
+
+    def slack(self, request: Request, submitted_at: Mapping[int, float],
+              now: float) -> float:
+        """Scheduler-clock ticks to spare before the request's deadline
+        (infinite for best-effort requests)."""
+        if request.deadline is None:
+            return math.inf
+        due = submitted_at.get(request.uid, now) + request.deadline
+        return due - now - self.est_service(request)
+
+    def select(self, candidates: Sequence[Request],
+               submitted_at: Mapping[int, float],
+               now: float) -> Optional[int]:
+        if not candidates:
+            return None
+
+        def key(i: int) -> Tuple[float, float, int]:
+            r = candidates[i]
+            # Final tie-break is the QUEUE position (candidates arrive in
+            # queue order), so equal-slack requests stay strictly FIFO.
+            return (self.slack(r, submitted_at, now),
+                    submitted_at.get(r.uid, now), i)
+
+        return min(range(len(candidates)), key=key)
 
 
 class Scheduler:
-    """FIFO admission over a fixed number of slots.
+    """Policy-driven admission over a fixed number of slots.
 
     Tier-agnostic by default (mixed-tier engines fill any slot from the
-    FIFO head); ``admit(slot, tier=...)`` restricts admission to one tier
-    for the serialized baseline."""
+    queue); ``admit(slot, tier=...)`` restricts candidates to one tier for
+    the serialized baseline.  WHICH compatible candidate wins is the
+    ``policy``'s call (:class:`FIFOPolicy` unless configured otherwise)."""
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int,
+                 policy: Optional[SchedulerPolicy] = None) -> None:
         self.num_slots = num_slots
+        self.policy: SchedulerPolicy = policy if policy is not None \
+            else FIFOPolicy()
         self.waiting: Deque[Request] = deque()
+        self.submitted_at: Dict[int, float] = {}
         self.slots: List[Optional[SlotState]] = [None] * num_slots
         self.finished: Dict[int, List[int]] = {}
 
     # -------------------------------------------------------------- queueing
-    def submit(self, request: Request) -> None:
-        """Append to the FIFO waiting queue."""
+    def submit(self, request: Request, now: float = 0.0) -> None:
+        """Append to the waiting queue, stamping the submission clock.
+
+        ``submitted_at`` entries exist only while a request WAITS (policies
+        price queue age, nothing else); admission prunes them, so the dict
+        never outgrows the queue in a long-running server."""
         self.waiting.append(request)
+        self.submitted_at[request.uid] = now
 
     def free_slots(self) -> List[int]:
         """Indices of currently unoccupied slots."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def next_tier(self) -> Optional[str]:
-        """Tier of the oldest waiting request (None when queue empty or the
-        request carries no tier) — what an idle engine should switch to."""
-        return self.waiting[0].tier if self.waiting else None
+    def _candidates(self, tier: TierFilter) -> List[int]:
+        """Queue indices compatible with the tier constraint, queue order."""
+        if isinstance(tier, _AnyTier):
+            return list(range(len(self.waiting)))
+        return [i for i, r in enumerate(self.waiting) if r.tier == tier]
 
-    def admit(self, slot: int, tier=ANY_TIER) -> Optional[Request]:
-        """Pop the next *compatible* waiting request into ``slot``.
+    def _pick(self, tier: TierFilter, now: float) -> Optional[int]:
+        """Queue index of the policy's choice among compatible candidates."""
+        idxs = self._candidates(tier)
+        if not idxs:
+            return None
+        chosen = self.policy.select([self.waiting[i] for i in idxs],
+                                    self.submitted_at, now)
+        return None if chosen is None else idxs[chosen]
 
-        ``tier=ANY_TIER`` takes the FIFO head; a tier name takes the oldest
-        waiting request of THAT tier (requests of other tiers keep their
-        queue position and wait for their tier's decode phase).  Returns
-        None if no compatible request waits."""
-        if self.slots[slot] is not None:
-            raise ValueError(f"slot {slot} is occupied (uid "
-                             f"{self.slots[slot].uid})")
-        if tier is ANY_TIER:
-            if not self.waiting:
-                return None
-            req = self.waiting.popleft()
-        else:
-            idx = next((i for i, r in enumerate(self.waiting)
-                        if r.tier == tier), None)
-            if idx is None:
-                return None
-            req = self.waiting[idx]
-            del self.waiting[idx]
+    def peek(self, tier: TierFilter = ANY_TIER,
+             now: float = 0.0) -> Optional[Request]:
+        """The request the policy WOULD admit next (no state change) — what
+        an idle tier-serialized engine uses to choose its next tier."""
+        idx = self._pick(tier, now)
+        return None if idx is None else self.waiting[idx]
+
+    def admit(self, slot: int, tier: TierFilter = ANY_TIER,
+              now: float = 0.0) -> Optional[Request]:
+        """Pop the policy's choice of *compatible* waiting request into
+        ``slot``.
+
+        ``tier=ANY_TIER`` considers the whole queue; a tier name restricts
+        candidates to THAT tier (requests of other tiers keep their queue
+        position and wait for their tier's decode phase).  Returns None if
+        no compatible request waits."""
+        occupant = self.slots[slot]
+        if occupant is not None:
+            raise ValueError(f"slot {slot} is occupied (uid {occupant.uid})")
+        idx = self._pick(tier, now)
+        if idx is None:
+            return None
+        req = self.waiting[idx]
+        del self.waiting[idx]
+        self.submitted_at.pop(req.uid, None)   # only waiting requests age
         self.slots[slot] = SlotState(request=req,
                                      remaining=req.max_new_tokens)
         return req

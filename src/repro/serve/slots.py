@@ -28,30 +28,30 @@ from repro.models.layers import KVCache
 SLOT_AXIS = 1   # cache leaves are [n_periods, B, ...]
 
 
-def slot_view(caches, slot):
+def slot_view(caches: Any, slot: Any) -> Any:
     """Extract slot ``slot`` as a batch-1 cache pytree (traced-index ok)."""
     return jax.tree.map(
         lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS),
         caches)
 
 
-def slot_write(caches, sub, slot):
+def slot_write(caches: Any, sub: Any, slot: Any) -> Any:
     """Write a batch-1 cache pytree back into slot ``slot``."""
-    def put(a, s):
+    def put(a: Any, s: Any) -> Any:
         idx = [0] * a.ndim
         idx[SLOT_AXIS] = slot
         return jax.lax.dynamic_update_slice(a, s.astype(a.dtype), tuple(idx))
     return jax.tree.map(put, caches, sub)
 
 
-def slot_reset(caches, slot):
+def slot_reset(caches: Any, slot: Any) -> Any:
     """Zero one slot's cache state (lengths included) in place of the pytree."""
     zero = jax.tree.map(lambda a: jnp.zeros_like(
         jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS)), caches)
     return slot_write(caches, zero, slot)
 
 
-def fill_kv_tier(caches, code):
+def fill_kv_tier(caches: Any, code: Any) -> Any:
     """Set every mixed-mode KVCache's per-slot tier lane(s) to ``code``.
 
     ``code`` is a (traced-ok) int32 tier code (16 = bf16, 8, 4).  Applied to
@@ -59,13 +59,35 @@ def fill_kv_tier(caches, code):
     rest of the slot state, so the admitted request's K/V rows quantize at
     ITS tier from the first prefill write on.  No-op for caches without
     per-slot tiers (SSM caches, homogeneous KV modes)."""
-    def one(c):
+    def one(c: Any) -> Any:
         if isinstance(c, KVCache) and c.kv_bits is not None:
             return dataclasses.replace(
                 c, kv_bits=jnp.zeros_like(c.kv_bits) + code)
         return c
     return jax.tree.map(one, caches,
                         is_leaf=lambda c: isinstance(c, KVCache))
+
+
+def migrate_kv_tier(caches: Any, slot: Any, code: Any) -> Any:
+    """Requantize ONE slot's live KV lane at a new tier code, in place of
+    the arena pytree (the KV half of mid-stream tier migration).
+
+    ``slot`` and ``code`` (16 = bf16, 8, 4) are traced-ok int32 scalars, so
+    one jitted instance serves every (slot, from-tier, to-tier) migration.
+    The slot's lanes are dequantized at their CURRENT tier and re-encoded
+    at ``code`` through :meth:`repro.models.layers.KVCache.requantize` —
+    bit-identical to quantizing the dequantized cache directly at the
+    target precision.  Lengths, SSM state and every other slot are
+    untouched.  No-op for caches without per-slot tiers."""
+    sub = slot_view(caches, slot)
+
+    def one(c: Any) -> Any:
+        if isinstance(c, KVCache) and c.mixed:
+            return c.requantize(code)
+        return c
+
+    sub = jax.tree.map(one, sub, is_leaf=lambda c: isinstance(c, KVCache))
+    return slot_write(caches, sub, slot)
 
 
 class SlotArena:
@@ -78,8 +100,8 @@ class SlotArena:
     arena.  ``tiers`` is the host-side slot -> tier-name vector the engine
     maintains at admit/release time (None = slot free)."""
 
-    def __init__(self, model, max_slots: int, max_len: int,
-                 kv_bits=None):
+    def __init__(self, model: Any, max_slots: int, max_len: int,
+                 kv_bits: Any = None) -> None:
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_bits = kv_bits

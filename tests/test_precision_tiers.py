@@ -175,12 +175,13 @@ def test_scheduler_tier_grouped_admission():
     for i, t in enumerate(["a", "b", "a", "b"]):
         sched.submit(Request(uid=i, prompt=np.array([1]), max_new_tokens=2,
                              tier=t))
-    assert sched.next_tier() == "a"
+    # peek() = what an idle serialized engine switches its next tier to.
+    assert sched.peek().tier == "a"
     # Tier-constrained admission skips queued other-tier requests (they keep
     # their FIFO position for their own tier's phase).
     assert sched.admit(0, tier="a").uid == 0
     assert sched.admit(1, tier="a").uid == 2
-    assert sched.next_tier() == "b"
+    assert sched.peek().tier == "b"
     sched.slots[0] = None
     assert sched.admit(0, tier=None) is None     # no untiered request waits
     assert sched.admit(0, tier="b").uid == 1     # FIFO within tier b

@@ -1,0 +1,533 @@
+"""The streaming serving API: request handles, submit/step/drain, SLO-aware
+admission, and mid-stream tier migration.
+
+Covers the redesign's contracts:
+
+* ``run`` is a thin wrapper over the incremental core (token-identical to
+  manual submit/step/drain; both engines implement the ``Engine``
+  protocol);
+* handles stream tokens (iterator + callback) and walk QUEUED -> RUNNING ->
+  FINISHED;
+* scheduler edge cases the policy layer must preserve: admission into a
+  slot freed mid-chunk, duplicate-uid submission, zero-budget requests,
+  empty-queue ``step()`` as a no-op;
+* ``SLOPolicy`` admits by deadline slack priced with the hwmodel's
+  per-tier cost, beating FIFO for a deadline-skewed trace;
+* mid-stream ``set_tier``: the migrated KV lane is bit-identical to
+  quantizing the slot's dequantized cache directly at the target
+  precision, and subsequent tokens are token-identical to a fresh engine
+  resumed from the migrated state at the new tier.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.policy import uniform_policy, uniform_schedule
+from repro.models.layers import KVCache, Runtime
+from repro.models.transformer import LM
+from repro.serve import (BatchServeEngine, Engine, FIFOPolicy, Request,
+                         RequestHandle, RequestStatus, Scheduler, ServeEngine,
+                         SLOPolicy)
+from repro.serve import slots as slots_lib
+from repro.serve.scheduler import SlotState
+
+RT_DENSE = Runtime(policy=uniform_policy(8, 8, backend="dense"),
+                   mode="serve", moe_dropless=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def tiered(setup):
+    """A two-tier schedule with maximally different KV precisions
+    (bf16 vs int4-packed) — the hardest migration pair."""
+    cfg, model, params = setup
+    sched = uniform_schedule({"8/8": (8, 8), "2/2": (2, 2)},
+                             kv_tiers={"8/8": None, "2/2": 4})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    return cfg, model, params, sched, rt
+
+
+def _requests(cfg, n, *, seed=0, plen=lambda i: 3 + i % 5,
+              budget=lambda i: 2 + 3 * (i % 3), tier=lambda i: None,
+              deadline=lambda i: None):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=plen(i)),
+                    max_new_tokens=budget(i), tier=tier(i),
+                    deadline=deadline(i)) for i in range(n)]
+
+
+# ------------------------------------------------------------ engine protocol
+def test_both_engines_satisfy_engine_protocol(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=32)
+    base = BatchServeEngine(model, params, RT_DENSE, max_batch=2, max_len=32)
+    assert isinstance(eng, Engine)
+    assert isinstance(base, Engine)
+
+
+def test_run_equals_manual_submit_step_drain(setup):
+    """The compatibility wrapper: ``run`` == submit all + drain, token for
+    token, on both engines."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 5, seed=1)
+    for cls in (ServeEngine, BatchServeEngine):
+        a = cls(model, params, RT_DENSE, max_batch=2, max_len=64)
+        want = a.run(reqs)
+        b = cls(model, params, RT_DENSE, max_batch=2, max_len=64)
+        handles = [b.submit(r) for r in reqs]
+        finished = b.drain()
+        assert finished == want
+        for h, r in zip(handles, reqs):
+            assert h.done and h.tokens == want[r.uid]
+
+
+# -------------------------------------------------------------------- handles
+def test_handle_iterator_streams_tokens(setup):
+    """``for tok in handle`` drives the engine and yields the same tokens
+    the blocking API returns."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 3, seed=2)
+    ref = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=64)
+    want = ref.run(reqs)
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=64)
+    handles = [eng.submit(r) for r in reqs]
+    assert all(h.status is RequestStatus.QUEUED for h in handles)
+    streamed = {r.uid: list(h) for h, r in zip(handles, reqs)}
+    assert streamed == want
+    assert all(h.done for h in handles)
+
+
+def test_handle_callback_and_replay(setup):
+    """Callbacks fire per token; late registration replays the buffered
+    prefix so every subscriber sees the identical stream."""
+    cfg, model, params = setup
+    req = _requests(cfg, 1, seed=3, budget=lambda i: 6)[0]
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    h = eng.submit(req)
+    live = []
+    h.on_token(lambda ev: live.append((ev.index, ev.token, ev.final)))
+    eng.step()                              # partial progress
+    late = []
+    h.on_token(lambda ev: late.append((ev.index, ev.token, ev.final)))
+    assert late == live                     # replayed prefix
+    got = h.result()
+    assert [t for _, t, _ in live] == got
+    assert live == late
+    assert [i for i, _, _ in live] == list(range(req.max_new_tokens))
+    assert [f for _, _, f in live] == [False] * (req.max_new_tokens - 1) \
+        + [True]
+
+
+def test_step_events_reconstruct_results(setup):
+    """step()'s TokenEvents are a faithful stream: per-uid tokens in index
+    order reconstruct the results, with exactly one final event each."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 4, seed=4)
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=64,
+                      decode_chunk=3)
+    for r in reqs:
+        eng.submit(r)
+    events = []
+    while eng.has_work:
+        events.append(eng.step())
+    flat = [ev for round_ in events for ev in round_]
+    by_uid = {}
+    for ev in flat:
+        assert ev.index == len(by_uid.setdefault(ev.uid, []))
+        by_uid[ev.uid].append(ev.token)
+    assert by_uid == eng.results
+    assert sorted(ev.uid for ev in flat if ev.final) == [r.uid for r in reqs]
+
+
+def test_handle_clocks_and_queue_wait(setup):
+    """QUEUED -> RUNNING -> FINISHED clock stamps: a request that waits for
+    a slot records a positive queue wait in decode-step ticks."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 3, seed=5, budget=lambda i: 4)
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    handles = [eng.submit(r) for r in reqs]
+    eng.drain()
+    assert all(h.done and h.finished_at is not None for h in handles)
+    assert handles[0].queue_wait == 0.0 and handles[1].queue_wait == 0.0
+    assert handles[2].queue_wait > 0.0     # waited for a freed slot
+
+
+# ------------------------------------------------------- scheduler edge cases
+def test_empty_queue_step_is_noop(setup):
+    cfg, model, params = setup
+    for cls in (ServeEngine, BatchServeEngine):
+        eng = cls(model, params, RT_DENSE, max_batch=2, max_len=32)
+        assert eng.step() == []
+        assert not eng.has_work
+        assert eng.stats.decode_steps == 0 and eng.stats.prefills == 0
+        assert eng.drain() == {}
+
+
+def test_admission_into_slot_freed_mid_chunk(setup):
+    """A slot whose budget exhausts MID-chunk is freed at the chunk
+    boundary and re-admits the next waiting request — exactly one prefill
+    per request, same slot reused, outputs identical to solo runs."""
+    cfg, model, params = setup
+    budgets = [3, 10, 4]                  # uid 0 dies at step 2 of chunk 0
+    reqs = _requests(cfg, 3, seed=6, plen=lambda i: 4,
+                     budget=lambda i: budgets[i])
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=2, max_len=64,
+                      decode_chunk=4)
+    handles = [eng.submit(r) for r in reqs]
+    eng.drain()
+    got = eng.results
+    assert eng.stats.prefills == 3
+    assert handles[2].slot is None and handles[2].done
+    assert handles[2].admitted_at > 0     # admitted after a freed chunk
+    solo = ServeEngine(model, params, RT_DENSE, max_batch=1, max_len=64,
+                       decode_chunk=4)
+    want = solo.run(reqs)
+    assert got == want
+
+
+def test_duplicate_uid_rejected_on_both_engines(setup):
+    cfg, model, params = setup
+    r = Request(uid=9, prompt=np.array([1, 2], np.int32), max_new_tokens=2)
+    for cls in (ServeEngine, BatchServeEngine):
+        eng = cls(model, params, RT_DENSE, max_batch=2, max_len=32)
+        eng.submit(r)
+        with pytest.raises(ValueError, match="already submitted"):
+            eng.submit(dataclasses.replace(r))
+
+
+def test_zero_budget_request_rejected(setup):
+    cfg, model, params = setup
+    r = Request(uid=0, prompt=np.array([1], np.int32), max_new_tokens=0)
+    for cls in (ServeEngine, BatchServeEngine):
+        eng = cls(model, params, RT_DENSE, max_batch=2, max_len=32)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(r)
+        assert not eng.has_work and eng.step() == []
+
+
+def test_callback_exception_does_not_wedge_engine(setup):
+    """A user on_token callback that raises must surface the error WITHOUT
+    desyncing host slot bookkeeping from the already-advanced device
+    state: the engine keeps serving and every request still completes with
+    the exact same tokens as a callback-free engine."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 2, seed=20, budget=lambda i: 5)
+    for cls in (ServeEngine, BatchServeEngine):
+        eng = cls(model, params, RT_DENSE, max_batch=2, max_len=64)
+        h0 = eng.submit(reqs[0])
+        h1 = eng.submit(reqs[1])
+
+        def cb(ev):
+            raise RuntimeError("boom")
+
+        h0.on_token(cb)
+        with pytest.raises(RuntimeError, match="boom"):
+            while eng.has_work:
+                eng.step()
+        while eng.has_work:           # resume after the error: no wedge,
+            try:                      # no duplicate or lost tokens
+                eng.step()
+            except RuntimeError:
+                pass
+        assert h0.done and h1.done
+        ref = cls(model, params, RT_DENSE, max_batch=2, max_len=64)
+        want = ref.run(reqs)
+        assert {0: h0.tokens, 1: h1.tokens} == want
+
+
+def test_retire_drops_host_state_and_releases_uid(setup):
+    """retire(uid) is the long-running server's memory bound: it drops the
+    FINISHED handle + results entry and frees the uid for resubmission;
+    live or unknown uids refuse."""
+    cfg, model, params = setup
+    req = Request(uid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=2)
+    for cls in (ServeEngine, BatchServeEngine):
+        eng = cls(model, params, RT_DENSE, max_batch=2, max_len=32)
+        h = eng.submit(dataclasses.replace(req))
+        with pytest.raises(RuntimeError, match="only FINISHED"):
+            eng.retire(0)
+        eng.drain()
+        toks = eng.retire(0)
+        assert toks == h.tokens and len(toks) == 2
+        assert 0 not in eng.handles and 0 not in eng.results
+        with pytest.raises(KeyError):
+            eng.retire(0)
+        h2 = eng.submit(dataclasses.replace(req))   # uid released for reuse
+        eng.drain()
+        assert h2.tokens == toks                    # same engine, same state
+
+
+def test_batch_run_validates_all_before_queueing(setup):
+    """BatchServeEngine.run keeps the historical all-or-nothing contract:
+    a bad request anywhere in the list raises before ANY request is queued
+    or its uid burned."""
+    cfg, model, params = setup
+    good = Request(uid=0, prompt=np.array([1, 2], np.int32),
+                   max_new_tokens=2)
+    bad = Request(uid=1, prompt=np.zeros(0, np.int32), max_new_tokens=2)
+    eng = BatchServeEngine(model, params, RT_DENSE, max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.run([good, bad])
+    assert not eng.has_work              # nothing queued
+    with pytest.raises(ValueError, match="already submitted"):
+        eng.run([good, dataclasses.replace(good)])   # intra-list duplicate
+    assert not eng.has_work
+    out = eng.run([good])                # uid was never burned
+    assert len(out[0]) == 2
+
+
+# ------------------------------------------------------------------ SLO policy
+def test_slo_policy_selection_order():
+    """Tightest slack first: slack = deadline - age - max_new * tier cost;
+    deadline-less requests are best-effort FIFO."""
+    pol = SLOPolicy(tier_costs={"hi": 4.0, "lo": 1.0})
+    r_loose = Request(uid=0, prompt=np.array([1]), max_new_tokens=8,
+                      tier="hi", deadline=100.0)       # slack 100-32 = 68
+    r_tight = Request(uid=1, prompt=np.array([1]), max_new_tokens=8,
+                      tier="lo", deadline=10.0)        # slack 10-8 = 2
+    r_none = Request(uid=2, prompt=np.array([1]), max_new_tokens=8,
+                     tier="lo")                        # slack inf
+    at = {0: 0.0, 1: 0.0, 2: 0.0}
+    assert pol.select([r_loose, r_tight, r_none], at, now=0.0) == 1
+    # Cost pricing: the SAME deadline bites earlier on an expensive tier.
+    r_hi = dataclasses.replace(r_loose, uid=3, deadline=40.0)  # slack 8
+    r_lo = dataclasses.replace(r_tight, uid=4, deadline=40.0)  # slack 32
+    assert pol.select([r_lo, r_hi], {3: 0.0, 4: 0.0}, now=0.0) == 1
+    # Without deadlines the policy degrades to FIFO (submission order).
+    at2 = {5: 0.0, 6: 1.0}
+    a = dataclasses.replace(r_none, uid=6)
+    b = dataclasses.replace(r_none, uid=5)
+    assert pol.select([a, b], at2, now=5.0) == 1
+    assert FIFOPolicy().select([a, b], at2, now=5.0) == 0
+    # Fully equal slack AND submission clock: ties break on QUEUE position
+    # (the documented FIFO contract), never on uid.
+    c = dataclasses.replace(r_tight, uid=9)
+    d = dataclasses.replace(r_tight, uid=2)
+    assert pol.select([c, d], {9: 0.0, 2: 0.0}, now=0.0) == 0
+
+
+def test_slo_policy_costs_from_schedule(tiered):
+    """Admission pricing comes from the hwmodel: the 8/8 tier costs more
+    cycles per token than 2/2 (normalized to the cheapest = 1.0)."""
+    cfg, model, params, sched, rt = tiered
+    pol = SLOPolicy(sched)
+    assert pol.cost("2/2") == 1.0
+    assert pol.cost("8/8") > 1.0
+
+
+def test_slo_admission_jumps_tight_deadline(setup):
+    """Engine-level: with one slot, SLO admission serves the
+    tight-deadline request first even though it was submitted last; FIFO
+    serves submission order."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 3, seed=7, budget=lambda i: 4,
+                     deadline=lambda i: 100.0 if i < 2 else 6.0)
+    fifo = ServeEngine(model, params, RT_DENSE, max_batch=1, max_len=64,
+                       decode_chunk=2)
+    hf = [fifo.submit(r) for r in reqs]
+    fifo.drain()
+    slo = ServeEngine(model, params, RT_DENSE, max_batch=1, max_len=64,
+                      decode_chunk=2, scheduler_policy=SLOPolicy())
+    hs = [slo.submit(r) for r in reqs]
+    slo.drain()
+    # Same tokens either way (admission order never changes per-request
+    # results on this engine), but the tight request waits far less.
+    assert slo.results == fifo.results
+    assert hs[2].admitted_at == 0.0        # jumped the queue
+    assert hf[2].admitted_at > hf[1].admitted_at
+    assert hs[2].queue_wait < hf[2].queue_wait
+
+
+# ----------------------------------------------------------- tier migration
+def test_set_tier_validation(setup, tiered):
+    cfg, model, params = setup
+    _, _, _, sched, rt = tiered
+    # Untiered engine: no tiers to migrate between.
+    eng = ServeEngine(model, params, RT_DENSE, max_batch=1, max_len=32)
+    h = eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(ValueError, match="PrecisionSchedule"):
+        h.set_tier("8/8")
+    # Tiered engine: unknown tier / finished handle.
+    eng2 = ServeEngine(model, params, rt, max_batch=1, max_len=32)
+    h2 = eng2.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                             max_new_tokens=2, tier="8/8"))
+    with pytest.raises(ValueError, match="unknown tier"):
+        h2.set_tier("3/3")
+    eng2.drain()
+    with pytest.raises(RuntimeError, match="finished"):
+        h2.set_tier("2/2")
+    # Serialized mode: RUNNING migration unsupported (QUEUED retag is fine).
+    eng3 = ServeEngine(model, eng2.params, rt, max_batch=1, max_len=32,
+                       mixed_tiers=False, decode_chunk=2)
+    h3 = eng3.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                             max_new_tokens=8, tier="8/8"))
+    h4 = eng3.submit(Request(uid=1, prompt=np.array([1, 2], np.int32),
+                             max_new_tokens=4, tier="8/8"))
+    h4.set_tier("2/2")                     # queued: allowed
+    assert h4.tier == "2/2"
+    eng3.step()
+    with pytest.raises(RuntimeError, match="mixed_tiers"):
+        h3.set_tier("2/2")
+    # Reference engine: never.
+    base = BatchServeEngine(model, eng2.params, rt, max_batch=1, max_len=32)
+    hb = base.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                             max_new_tokens=2, tier="8/8"))
+    with pytest.raises(RuntimeError, match="pins one tier"):
+        hb.set_tier("2/2")
+
+
+def test_set_tier_queued_retags_and_reprices(tiered):
+    """A QUEUED set_tier re-tags the waiting request: it prefills at the
+    new tier and its tokens match a request submitted at that tier
+    directly."""
+    cfg, model, params, sched, rt = tiered
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=5)
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    blocker = eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=2,
+                                 tier="8/8"))
+    h = eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=4,
+                           tier="8/8"))
+    h.set_tier("2/2")                      # still queued behind the blocker
+    assert h.status is RequestStatus.QUEUED and h.tier == "2/2"
+    eng.drain()
+    ref = ServeEngine(model, eng.params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    want = ref.run([Request(uid=1, prompt=prompt, max_new_tokens=4,
+                            tier="2/2")])
+    assert eng.results[1] == want[1]
+    assert eng.stats.tier_migrations == 0  # queued retag is not a migration
+
+
+def _migration_run(tiered, *, capture):
+    """Drive one mid-stream bf16 -> int4 migration; ``capture(eng, h)`` is
+    called right after set_tier with the engine in the migrated state."""
+    cfg, model, params, sched, rt = tiered
+    rng = np.random.default_rng(12)
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    h = eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab_size, size=5),
+                           max_new_tokens=12, tier="8/8"))
+    eng.step()
+    eng.step()                             # some decode progress at 8/8
+    assert h.status is RequestStatus.RUNNING
+    pre = eng.arena.caches                 # immutable arrays: safe snapshot
+    h.set_tier("2/2")
+    assert eng.stats.tier_migrations == 1 and eng.stats.kv_migrations == 1
+    capture(eng, h, pre)
+    return eng, h
+
+
+def test_migration_kv_lane_bit_identity(tiered):
+    """The migrated slot's KV lane must be bit-identical to quantizing the
+    slot's dequantized cache directly at the target precision (and every
+    other slot must be untouched).
+
+    The reference runs under an INDEPENDENT jit (a fresh trace of
+    dequantize -> encode on the pre-migration snapshot): the engine's
+    migration must reproduce it bit-for-bit across separate compilations —
+    the ``optimization_barrier`` contract that pins the continuous-scale
+    subgraphs (eager execution is outside that contract; see
+    ``models/layers.py::_kv_quant``)."""
+    sched = tiered[3]
+    code = sched.kv_code_for("2/2")
+    assert code == 4
+
+    @jax.jit
+    def direct_requantize(pre, slot, code):
+        sub = slots_lib.slot_view(pre, slot)
+        sub = jax.tree.map(
+            lambda c: c.requantize(code)
+            if isinstance(c, KVCache) and c.mixed else c,
+            sub, is_leaf=lambda c: isinstance(c, KVCache))
+        return slots_lib.slot_write(pre, sub, slot)
+
+    def capture(eng, h, pre):
+        want = direct_requantize(pre, h.slot, code)
+        for got_l, want_l in zip(jax.tree.leaves(eng.arena.caches),
+                                 jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(got_l),
+                                          np.asarray(want_l))
+
+    _migration_run(tiered, capture=capture)
+
+
+def test_migration_continuation_matches_fresh_engine(tiered):
+    """After migration, subsequent tokens must be token-identical to a
+    FRESH engine resumed from the migrated state at the new tier (fresh jit
+    traces — the migrated state is self-contained)."""
+    cfg, model, params, sched, rt = tiered
+    snap = {}
+
+    def capture(eng, h, pre):
+        state = eng.scheduler.slots[h.slot]
+        snap.update(caches=eng.arena.caches, slot=h.slot,
+                    tok=eng._tok.copy(), remaining=eng._remaining.copy(),
+                    emitted=len(state.tokens), request=state.request)
+
+    eng, h = _migration_run(tiered, capture=capture)
+    tail_a = h.result()[snap["emitted"]:]
+    assert tail_a                           # migration happened mid-stream
+
+    fresh = ServeEngine(model, eng.params, rt, max_batch=2, max_len=64,
+                        decode_chunk=2)
+    slot = snap["slot"]
+    req = dataclasses.replace(snap["request"])   # tier already "2/2"
+    fresh.arena.caches = snap["caches"]
+    fresh.arena.tiers[slot] = req.tier
+    fresh.scheduler.slots[slot] = SlotState(
+        request=req, tokens=[0] * snap["emitted"],
+        remaining=req.max_new_tokens - snap["emitted"])
+    fresh._tok = snap["tok"].copy()
+    fresh._remaining = snap["remaining"].copy()
+    fresh._seen_uids.add(req.uid)
+    hb = RequestHandle(req, fresh)
+    hb._mark_admitted(slot, 0.0)
+    fresh.handles[req.uid] = hb
+    tail_b = []
+    while fresh.has_work:
+        tail_b.extend(ev.token for ev in fresh.step())
+    assert tail_b == tail_a
+
+
+def test_migration_token_parity_same_kv_tier(tiered):
+    """Migrating between tiers that SHARE a KV precision is a pure weight
+    plane-prefix switch: the KV arena is left byte-for-byte untouched (no
+    requantization) and decoding completes at the new tier."""
+    cfg, model, params, _, _ = tiered
+    sched = uniform_schedule({"8/8": (8, 8), "4/4": (4, 4)},
+                             kv_tiers={"8/8": 8, "4/4": 8})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    rng = np.random.default_rng(13)
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    h = eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab_size, size=4),
+                           max_new_tokens=8, tier="8/8"))
+    eng.step()
+    pre = eng.arena.caches
+    h.set_tier("4/4")
+    assert eng.stats.tier_migrations == 1
+    assert eng.stats.kv_migrations == 0      # same kv precision: no requant
+    for a, b in zip(jax.tree.leaves(eng.arena.caches), jax.tree.leaves(pre)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    h.result()
+    assert len(eng.results[0]) == 8

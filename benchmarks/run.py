@@ -450,6 +450,66 @@ def bench_serve_slo_scheduling():
          "token_identical=True preps_after_construction=0")
 
 
+def bench_autoprec_search():
+    """Hardware-aware automatic mixed-precision search (repro.autoprec):
+    Pareto front of avg bits vs modeled cycles vs measured divergence.
+
+    Profiles every layer of a small config through the REAL quantization
+    path (batched one-pass row groups over the superplane store), runs both
+    search strategies (greedy marginal-divergence-per-cycle + MixPrec-style
+    differentiable relaxation), jointly re-measures three front points, and
+    asserts the acceptance invariants: even truncatable widths only, and a
+    selected point that Pareto-dominates the uniform-8 baseline on modeled
+    cycles at small measured divergence."""
+    from repro.autoprec import (CostModel, measure_divergence, pareto_front,
+                                profile_sensitivity, random_calibration,
+                                schedule_from_results, search)
+    from repro.configs import reduced_config
+    from repro.core.decompose import RUNTIME_W_BITS
+    from repro.core.policy import uniform_schedule
+    from repro.models.transformer import LM
+    from repro.serve import prepare_params
+
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params, _ = prepare_params(
+        params, uniform_schedule({"8/8": (8, 8)}).prepare_policy(),
+        model, superplane=True)
+    calib = random_calibration(cfg, batches=1, batch=2, seq=8, seed=5)
+    choices = (2, 4, 6)
+
+    t0 = time.perf_counter()
+    profile = profile_sensitivity(model, params, calib=calib,
+                                  choices=choices, block=8)
+    cost = CostModel.for_config(cfg)
+    front = search(profile.table, cost, choices=choices, strategy="both")
+    pts = [front[0], front[len(front) // 2], front[-1]]
+    meas = measure_divergence(model, params,
+                              {f"p{i}": r.assignment
+                               for i, r in enumerate(pts)}, calib=calib)
+    for i, r in enumerate(pts):
+        r.measured_divergence = meas[f"p{i}"]
+    us = (time.perf_counter() - t0) * 1e6
+
+    assert front, "empty Pareto front"
+    assert all(b in RUNTIME_W_BITS for r in front
+               for b in r.assignment.values()), "non-truncatable width"
+    uniform8 = cost.uniform_cycles(8)
+    best = pts[-1]
+    assert best.cycles_per_token < uniform8, (best.cycles_per_token, uniform8)
+    assert best.measured_divergence < 0.1, best.measured_divergence
+    schedule_from_results([best])       # must emit a valid schedule
+    front = pareto_front(front)
+    _row("autoprec_search", us,
+         f"front={len(front)}pts "
+         "avg_bits/cycles/meas_div={"
+         + " ".join(f"{r.avg_bits:.2f}b:{r.cycles_per_token:.0f}cyc:"
+                    f"{r.measured_divergence:.1e}" for r in pts)
+         + "} " + f"uniform8={uniform8:.0f}cyc "
+         f"dominates_uniform8=True")
+
+
 def bench_dryrun_roofline_summary():
     """Summarize the multi-pod dry-run roofline table if results exist."""
     res_dir = os.path.join(os.path.dirname(os.path.dirname(
@@ -486,17 +546,26 @@ BENCHES = {
     "serve_precision_tiers": bench_serve_precision_tiers,
     "serve_mixed_tiers": bench_serve_mixed_tiers,
     "serve_slo_scheduling": bench_serve_slo_scheduling,
+    "autoprec_search": bench_autoprec_search,
     "dryrun_roofline": bench_dryrun_roofline_summary,
 }
 
 
 def main(argv=None) -> None:
-    """Run all rows, or a subset: ``run.py --only name [name ...]``."""
+    """Run all rows, or a subset: ``run.py --only name [name ...]``;
+    ``run.py --list`` enumerates the available rows."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="+", choices=sorted(BENCHES),
                     help="run only these rows (CI smoke)")
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate available rows (name: summary) and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in sorted(BENCHES):
+            doc = (BENCHES[name].__doc__ or "").strip().splitlines()
+            print(f"{name}: {doc[0] if doc else ''}")
+        return
     names = args.only or list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:

@@ -245,6 +245,20 @@ class PrecisionSchedule:
         return PrecisionPolicy(default=dataclasses.replace(
             default, w_bits=8, a_bits=8))
 
+    # -------------------------------------------------------- persistence
+    def to_json_dict(self) -> Dict:
+        """JSON-able dict form (exact round-trip via :meth:`from_json_dict`;
+        the format lives in :mod:`repro.autoprec.schedule_io`, which also
+        reads/writes whole files)."""
+        from repro.autoprec import schedule_io
+        return schedule_io.schedule_to_dict(self)
+
+    @classmethod
+    def from_json_dict(cls, d: Dict) -> "PrecisionSchedule":
+        """Rebuild (and re-validate) a schedule from its dict form."""
+        from repro.autoprec import schedule_io
+        return schedule_io.schedule_from_dict(d)
+
 
 def uniform_schedule(tiers: Dict[str, tuple],
                      backend: str = "decomposed",
@@ -264,39 +278,40 @@ def uniform_schedule(tiers: Dict[str, tuple],
 def allocate_bits_by_sensitivity(sensitivities: Dict[str, float],
                                  param_counts: Dict[str, int],
                                  avg_bits: float,
-                                 choices=(2, 3, 4, 5, 6, 7, 8),
+                                 choices=(2, 4, 6, 8),
                                  a_bits: int = 8,
                                  backend: str = "fake_quant") -> PrecisionPolicy:
     """Greedy sensitivity-based bit allocation (HAWQ-flavoured).
 
     Start everything at min(choices); repeatedly grant one step of extra
-    precision to the layer with the highest marginal sensitivity-per-parameter
-    until the parameter-weighted average bitwidth budget is exhausted.
+    precision to the layer with the best marginal sensitivity reduction per
+    budget unit until the parameter-weighted average bitwidth budget is
+    exhausted.  A scalar sensitivity models a symmetric quantizer whose
+    error halves per extra bit (``sens * 2^-bits``).
+
+    Thin wrapper over :func:`repro.autoprec.search.greedy_trajectory` (the
+    measured-sensitivity search core) so the two allocators cannot drift.
+    ``choices`` defaults to the EVEN widths the runtime superplane path can
+    actually serve (``PrecisionSchedule`` validates against
+    ``decompose.RUNTIME_W_BITS``); odd widths may still be requested
+    explicitly for the QAT/fake-quant policy path, which has no
+    plane-prefix constraint.
     """
+    from repro.autoprec.search import greedy_trajectory
+
     names = sorted(sensitivities)
-    lo, hi = min(choices), max(choices)
-    bits = {n: lo for n in names}
-    total_params = sum(param_counts[n] for n in names)
-    budget = avg_bits * total_params
-
-    def used():
-        return sum(bits[n] * param_counts[n] for n in names)
-
-    # Marginal value of +1 bit ~ sensitivity * 2^{-bits} (quantization error
-    # of a symmetric quantizer halves per extra bit).
-    import heapq
-    heap = [(-sensitivities[n] * 2.0 ** (-bits[n]), n) for n in names]
-    heapq.heapify(heap)
-    while heap:
-        neg_gain, n = heapq.heappop(heap)
-        if bits[n] >= hi:
-            continue
-        step = next(c for c in choices if c > bits[n]) - bits[n]
-        if used() + step * param_counts[n] > budget:
-            continue
-        bits[n] += step
-        heapq.heappush(heap, (-sensitivities[n] * 2.0 ** (-bits[n]), n))
-
+    missing = [n for n in names if n not in param_counts]
+    if missing:
+        raise ValueError(f"param_counts misses layers {missing}")
+    # Synthetic (layer, width) divergence table from the scalar prior; the
+    # budget is the classic parameter-weighted total-bits cap.
+    sens = {n: {b: sensitivities[n] * 2.0 ** (-b) for b in choices}
+            for n in names}
+    layer_cost = {n: {b: float(b * param_counts[n]) for b in choices}
+                  for n in names}
+    budget = avg_bits * sum(param_counts[n] for n in names)
+    traj = greedy_trajectory(names, sens, layer_cost, choices, budget=budget)
+    bits = traj[-1]
     rules = {n: LayerPrecision(w_bits=bits[n], a_bits=a_bits, backend=backend)
              for n in names}
     return PrecisionPolicy(rules=rules,

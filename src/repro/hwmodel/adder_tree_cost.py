@@ -11,7 +11,7 @@ measured power ratios (§IV, Table II) and documented as such.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 # Unit costs in gate equivalents (typical std-cell figures).
 GE_FA = 6.0
@@ -88,7 +88,8 @@ def csa_split_cost(n_inputs: int = 64) -> TreeCost:
     return TreeCost(fa=fa_lo + fa_msb, ha=ha_lo + ha_msb, cpa_fa=cpa)
 
 
-def low_msb_split(n_inputs: int = 64):
+def low_msb_split(n_inputs: int = 64
+                  ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
     fa_lo, ha_lo, _ = wallace_reduce([n_inputs, n_inputs])
     fa_msb, ha_msb, _ = wallace_reduce([n_inputs])
     return (fa_lo, ha_lo), (fa_msb, ha_msb)
@@ -98,7 +99,8 @@ PAPER_TABLE2 = {"area": 0.8486, "power_unsigned": 0.6897,
                 "power_signed": 0.7772}
 
 
-def _activity_factors(n_inputs: int = 64):
+def _activity_factors(n_inputs: int = 64
+                      ) -> Tuple[float, float, float, float, float]:
     """Solve the two path-activity factors so the power model reproduces the
     measured Table II ratios exactly (documented calibration; the structural
     counts above are derived, only these two scalars are fit).
@@ -117,7 +119,7 @@ def _activity_factors(n_inputs: int = 64):
     return a_low, a_msb, lo_ge, msb_ge, p_bat
 
 
-def table2_model(n_inputs: int = 64):
+def table2_model(n_inputs: int = 64) -> Dict[str, float]:
     """Returns normalized (area, power_unsigned, power_signed) of the CSA
     split tree relative to the BAT — compare with Table II:
     0.8486 / 0.6897 / 0.7772."""

@@ -20,9 +20,11 @@ the paper's own three points give 14/4.69 = 52.1/17.45 = 205.8/68.94 = 2.985
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import functools
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
+import numpy.typing as npt
 
 from repro.core import pe_array
 
@@ -43,17 +45,17 @@ _CFG = pe_array.PEArrayConfig(clk_mhz=CAL_FREQ_MHZ)
 
 def tops(w_bits: int, a_bits: int, *, freq_mhz: float = CAL_FREQ_MHZ) -> float:
     cfg = dataclasses.replace(_CFG, clk_mhz=freq_mhz)
-    return pe_array.peak_tops(cfg, w_bits, a_bits)
+    return float(pe_array.peak_tops(cfg, w_bits, a_bits))
 
 
-def _features(w_bits: int, a_bits: int) -> np.ndarray:
+def _features(w_bits: int, a_bits: int) -> npt.NDArray[np.float64]:
     from repro.core import decompose
     acc_width = (w_bits + a_bits + 6) / 16.0       # +log2(64 rows)
     multi_plane = 1.0 if decompose.num_planes(w_bits) > 1 else 0.0
     return np.array([1.0, acc_width, multi_plane, 1.0 / a_bits])
 
 
-def _solve_power_coeffs() -> np.ndarray:
+def _solve_power_coeffs() -> npt.NDArray[np.float64]:
     pts = sorted(PAPER_PE_EFF)
     feats = np.stack([_features(w, a) for w, a in pts])
     targets = np.array([tops(w, a) / PAPER_PE_EFF[(w, a)] for w, a in pts])
@@ -82,7 +84,7 @@ def pe_efficiency(w_bits: int, a_bits: int, *, toggle: float = CAL_TOGGLE,
         w_bits, a_bits, toggle=toggle, voltage=voltage, freq_mhz=freq_mhz)
 
 
-def accelerator_efficiency(w_bits: int, a_bits: int, **kw) -> float:
+def accelerator_efficiency(w_bits: int, a_bits: int, **kw: float) -> float:
     return pe_efficiency(w_bits, a_bits, **kw) / ACCEL_OVERHEAD
 
 
@@ -92,21 +94,23 @@ def peak_throughput_tops() -> float:
 
 
 def energy_per_mac_j(w_bits: int, a_bits: int, *, accelerator: bool = True,
-                     **kw) -> float:
+                     **kw: float) -> float:
     eff = accelerator_efficiency(w_bits, a_bits, **kw) if accelerator \
         else pe_efficiency(w_bits, a_bits, **kw)
     return 2.0 / (eff * 1e12)          # 2 ops per MAC
 
 
-def fig8_curve(w_bits: int, a_bits: int, toggles=(0.1, 0.2, 0.3, 0.4, 0.5,
-                                                  0.6, 0.7, 0.8, 0.9)):
+def fig8_curve(w_bits: int, a_bits: int,
+               toggles: Sequence[float] = (0.1, 0.2, 0.3, 0.4, 0.5,
+                                           0.6, 0.7, 0.8, 0.9)
+               ) -> Dict[float, float]:
     """Energy efficiency vs input toggle rate (Fig 8 family of curves)."""
     return {t: pe_efficiency(w_bits, a_bits, toggle=t) for t in toggles}
 
 
-def table3_ours() -> Dict[str, object]:
+def table3_ours() -> Dict[str, float]:
     return {
-        "tech_nm": 28,
+        "tech_nm": 28.0,
         "area_mm2": 0.75,
         "freq_mhz": PEAK_FREQ_MHZ,
         "peak_tops": peak_throughput_tops(),
@@ -127,13 +131,10 @@ def tier_cost(w_bits: int, a_bits: int, *, freq_mhz: float = CAL_FREQ_MHZ,
     depth of ``a_bits`` cycles.  These are the per-tier numbers the
     ``serve_precision_tiers`` benchmark reports."""
     from repro.core import decompose
-    cfg = dataclasses.replace(_CFG, clk_mhz=freq_mhz)
-    n_logical, _ = pe_array.logical_columns_per_pass(cfg, w_bits)
-    macs_per_cycle = cfg.rows * n_logical / a_bits
     return {
         "plane_passes": float(decompose.num_planes(w_bits)),
         "bitserial_depth": float(a_bits),
-        "cycles_per_mac": 1.0 / macs_per_cycle,
+        "cycles_per_mac": cycles_per_mac(w_bits, a_bits, freq_mhz=freq_mhz),
         "effective_tops": tops(w_bits, a_bits, freq_mhz=freq_mhz),
         "tops_per_w": pe_efficiency(w_bits, a_bits, toggle=toggle,
                                     freq_mhz=freq_mhz),
@@ -143,24 +144,87 @@ def tier_cost(w_bits: int, a_bits: int, *, freq_mhz: float = CAL_FREQ_MHZ,
 
 
 def precision_tier_table(tiers: Dict[str, Tuple[int, int]],
-                         **kw) -> Dict[str, Dict[str, float]]:
+                         **kw: float) -> Dict[str, Dict[str, float]]:
     """Per-tier cost table for ``{tier_name: (w_bits, a_bits)}``."""
     return {name: tier_cost(w, a, **kw) for name, (w, a) in tiers.items()}
 
 
-def relative_tier_costs(schedule) -> Dict[str, float]:
+@functools.lru_cache(maxsize=None)
+def cycles_per_mac(w_bits: int, a_bits: int, *,
+                   freq_mhz: float = CAL_FREQ_MHZ) -> float:
+    """Array cycles one MAC occupies at an effective (w_bits, a_bits).
+
+    The scalar hot path of :func:`tier_cost` (cached: the search loops in
+    ``repro.autoprec`` price thousands of candidate assignments against a
+    handful of distinct operating points)."""
+    cfg = dataclasses.replace(_CFG, clk_mhz=freq_mhz)
+    n_logical, _ = pe_array.logical_columns_per_pass(cfg, w_bits)
+    return float(a_bits) / (float(cfg.rows) * float(n_logical))
+
+
+@functools.lru_cache(maxsize=None)
+def _energy_per_mac_cached(w_bits: int, a_bits: int) -> float:
+    return energy_per_mac_j(w_bits, a_bits)
+
+
+def per_layer_cost(mac_counts: Sequence[float],
+                   w_bits: Sequence[int],
+                   a_bits: int) -> Dict[str, npt.NDArray[np.float64]]:
+    """Vectorized per-layer pricing of one precision assignment.
+
+    ``mac_counts[i]`` MACs served at ``w_bits[i]`` effective weight width
+    (activations uniform at ``a_bits``) cost ``cycles[i]`` array cycles and
+    ``energy_j[i]`` joules under the paper's accelerator model.  Distinct
+    operating points are priced once (cached scalars) and broadcast, so
+    pricing a whole model is O(layers) table lookups — the inner loop of
+    ``repro.autoprec.search``."""
+    macs = np.asarray(mac_counts, np.float64)
+    wb = np.asarray(w_bits, np.int64)
+    if macs.shape != wb.shape:
+        raise ValueError(f"mac_counts {macs.shape} and w_bits {wb.shape} "
+                         "must align")
+    cyc = np.empty_like(macs)
+    enj = np.empty_like(macs)
+    for b in np.unique(wb):
+        m = wb == b
+        cyc[m] = cycles_per_mac(int(b), a_bits)
+        enj[m] = _energy_per_mac_cached(int(b), a_bits)
+    return {"cycles": macs * cyc, "energy_j": macs * enj}
+
+
+def relative_tier_costs(schedule: Any,
+                        mac_counts: Optional[Mapping[str, float]] = None
+                        ) -> Dict[str, float]:
     """Relative per-token service cost of each tier of a
-    ``PrecisionSchedule`` (cycles/MAC from :func:`tier_cost`, normalized so
-    the cheapest tier costs 1.0).
+    ``PrecisionSchedule``, normalized so the cheapest tier costs 1.0.
+
+    Without ``mac_counts``, a tier is priced by its DEFAULT operating
+    point's cycles/MAC (``tier_bits`` — per-layer rule refinements are
+    invisible, so tiers that differ only in rules price identically).
+    With ``mac_counts`` (layer name -> MACs per token, e.g.
+    ``ArchConfig.quant_layer_macs()``) each tier is priced by its
+    MAC-weighted per-layer cycles through ``schedule.lookup`` — for
+    uniform tiers this reduces to exactly the default pricing, and for
+    searched schedules (tiers = per-layer rule sets over a common
+    default, the ``repro.autoprec`` output) it is what makes the tiers
+    distinguishable at all.
 
     This is the admission-pricing hook used by
     ``repro.serve.scheduler.SLOPolicy``: a tier that runs more plane passes
     / deeper bit-serial activations occupies the modeled array longer per
     token, so a deadline-aware scheduler must budget more service time for
     its requests."""
-    raw = {name: tier_cost(w, a)["cycles_per_mac"]
-           for name, (w, a) in ((t, schedule.tier_bits(t))
-                                for t in schedule.tier_names)}
+    raw: Dict[str, float] = {}
+    for t in schedule.tier_names:
+        if mac_counts:
+            raw[t] = sum(
+                float(m) * cycles_per_mac(int(prec.w_bits),
+                                          int(prec.a_bits))
+                for name, m in mac_counts.items()
+                for prec in (schedule.lookup(name, t),))
+        else:
+            w, a = schedule.tier_bits(t)
+            raw[t] = cycles_per_mac(int(w), int(a))
     floor = min(raw.values())
     return {name: c / floor for name, c in raw.items()}
 

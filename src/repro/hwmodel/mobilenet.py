@@ -10,7 +10,7 @@ the budget and reports the budget at which the 35.2 % reduction is matched.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional
 
 from repro.hwmodel import energy
 
@@ -57,27 +57,33 @@ def mobilenet_v2_layers(input_res: int = 224) -> List[ConvLayer]:
     return layers
 
 
-def total_macs(layers=None) -> int:
+def total_macs(layers: Optional[List[ConvLayer]] = None) -> int:
     return sum(l.macs for l in (layers or mobilenet_v2_layers()))
 
 
-def allocate_bits(avg_bits: float, layers=None) -> Dict[str, int]:
+def allocate_bits(avg_bits: float,
+                  layers: Optional[List[ConvLayer]] = None) -> Dict[str, int]:
     """Sensitivity-based per-layer bits via core.policy: first/last layers and
     depthwise convs are precision-critical (HAWQ-style folklore encoded as
     the sensitivity prior: sensitivity ~ 1/params, boosted for first/dw/fc)."""
     from repro.core.policy import allocate_bits_by_sensitivity
     layers = layers or mobilenet_v2_layers()
-    sens, counts = {}, {}
+    sens: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
     for l in layers:
+        # The allocator's greedy core prices promotions PER BUDGET UNIT
+        # (params x bits), so the 1/params weighting is built in; the
+        # prior only carries the kind boost.
         boost = 8.0 if l.kind in ("first", "fc", "dw") else 1.0
-        sens[l.name] = boost / max(l.params, 1) * 1e6
+        sens[l.name] = boost * 1e6
         counts[l.name] = l.params
     policy = allocate_bits_by_sensitivity(sens, counts, avg_bits,
                                           choices=(2, 3, 4, 5, 6, 8))
-    return {l.name: policy.lookup(l.name).w_bits for l in layers}
+    return {l.name: int(policy.lookup(l.name).w_bits) for l in layers}
 
 
-def inference_energy_j(bits: Dict[str, int], layers=None) -> float:
+def inference_energy_j(bits: Dict[str, int],
+                       layers: Optional[List[ConvLayer]] = None) -> float:
     layers = layers or mobilenet_v2_layers()
     return sum(l.macs * energy.energy_per_mac_j(bits[l.name], bits[l.name])
                for l in layers)
@@ -96,7 +102,8 @@ def power_reduction_vs_8bit(avg_bits: float) -> float:
 PAPER_REDUCTION = 0.352
 
 
-def inference_cycles(bits: Dict[str, int], layers=None,
+def inference_cycles(bits: Dict[str, int],
+                     layers: Optional[List[ConvLayer]] = None,
                      rows: int = 64, cols: int = 64) -> int:
     """Array cycles per inference from the PE-array occupancy model:
     each layer's MACs map onto rows x logical-columns at a_bits cycles/pass

@@ -70,6 +70,11 @@ def main(argv=None):
                     help="runtime precision tiers, e.g. --tiers 8/8 4/4 2/2: "
                          "ONE superplane preload, requests round-robin over "
                          "the tiers (even w only; overrides --w/a-bits)")
+    ap.add_argument("--schedule-file", default=None, metavar="SCHEDULE.json",
+                    help="serve a searched PrecisionSchedule written by "
+                         "repro.launch.autoprec (tiers, per-layer rules and "
+                         "kv_tiers come from the file; requests round-robin "
+                         "over its tiers)")
     ap.add_argument("--kv-tiers", nargs="+", default=None, metavar="KV",
                     help="per-tier KV-cache precision aligned with --tiers "
                          "(bf16, 8 or 4): ONE mixed per-slot KV arena, each "
@@ -83,6 +88,11 @@ def main(argv=None):
                     help="SLO-aware admission (SLOPolicy): every 3rd "
                          "request gets a tight deadline; reports per-"
                          "request queue waits and deadline misses")
+    ap.add_argument("--auto-tier", action="store_true",
+                    help="with --slo on a tiered engine: deadline-aware "
+                         "tier auto-selection — a deadlined request is "
+                         "retagged at admission to the best tier whose "
+                         "priced service time fits its slack")
     ap.add_argument("--migrate-demo", action="store_true",
                     help="mid-stream tier migration demo: after a few "
                          "tokens the first live request is migrated to the "
@@ -94,7 +104,32 @@ def main(argv=None):
     # Flag validation BEFORE any model building (full-size configs take
     # minutes to init; a bad flag combination must fail instantly).
     schedule = None
-    if args.tiers:
+    if args.schedule_file:
+        if args.tiers:
+            ap.error("--schedule-file carries its own tiers; drop --tiers")
+        if args.kv_tiers:
+            ap.error("--schedule-file carries its own kv_tiers; drop "
+                     "--kv-tiers")
+        if args.backend == "dense":
+            ap.error("--schedule-file needs an integer backend")
+        if args.baseline:
+            ap.error("--baseline has no per-request tier switching; drop "
+                     "--schedule-file")
+        from repro.autoprec import load_schedule
+        schedule = load_schedule(args.schedule_file)
+        if schedule.kv_tiers is not None and args.kv_bits is not None:
+            ap.error("--kv-bits conflicts with the schedule file's kv_tiers")
+        file_backends = {p.backend for p in schedule._all_precisions()}
+        if file_backends != {args.backend}:
+            ap.error(f"--backend {args.backend} does not match the schedule "
+                     f"file's backend(s) {sorted(file_backends)}; pass the "
+                     "matching --backend (or re-emit the file with "
+                     "repro.launch.autoprec --backend)")
+        # Downstream request/reporting logic round-robins over the loaded
+        # tier names exactly like hand-written --tiers.
+        args.tiers = list(schedule.tier_names)
+        policy = schedule.policy_for()
+    elif args.tiers:
         if args.backend == "dense":
             ap.error("--tiers needs an integer backend")
         if args.baseline:
@@ -131,6 +166,12 @@ def main(argv=None):
                      "--serialize-tiers / --baseline)")
     if args.slo and args.baseline:
         ap.error("--slo has no effect on the batch-at-a-time baseline")
+    if args.auto_tier and not args.slo:
+        ap.error("--auto-tier needs --slo (it is SLOPolicy's admission "
+                 "hook)")
+    if args.auto_tier and (schedule is None or args.serialize_tiers):
+        ap.error("--auto-tier needs runtime tiers with mixed admission "
+                 "(--tiers/--schedule-file, no --serialize-tiers)")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = LM(cfg)
@@ -155,7 +196,13 @@ def main(argv=None):
                                   max_batch=args.max_batch,
                                   max_len=args.max_len, kv_bits=args.kv_bits)
     else:
-        scheduler_policy = SLOPolicy(schedule) if args.slo else None
+        # Rules-aware tier pricing: searched schedules (per-layer rule
+        # tiers over a common default) only price differently when each
+        # tier's per-layer widths are MAC-weighted.
+        scheduler_policy = SLOPolicy(
+            schedule, auto_tier=args.auto_tier,
+            mac_counts=cfg.quant_layer_macs() if schedule else None) \
+            if args.slo else None
         engine = ServeEngine(model, params, rt, max_batch=args.max_batch,
                              max_len=args.max_len, kv_bits=args.kv_bits,
                              decode_chunk=args.decode_chunk,
@@ -222,7 +269,8 @@ def main(argv=None):
                      and h.finished_at > h.submitted_at + h.request.deadline)
         print(f"slo: queue_wait p50={np.percentile(waits, 50):.0f} "
               f"p99={np.percentile(waits, 99):.0f} ticks, "
-              f"deadline_misses={misses}/{len(handles)}")
+              f"deadline_misses={misses}/{len(handles)}, "
+              f"tier_autoselects={st.tier_autoselects}")
     return results
 
 

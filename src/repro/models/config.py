@@ -129,3 +129,49 @@ class ArchConfig:
         inactive = (self.num_experts - self.experts_per_token)
         total -= n_moe_layers * inactive * 3 * d * self.d_ff
         return total
+
+    def quant_layer_macs(self) -> "dict[str, int]":
+        """MACs per decoded token of every *quantizable* projection, keyed
+        by its policy layer name (insertion order = model order).
+
+        The names match what ``serve.engine.prepare_params`` derives from
+        the param tree (``layers.pos{i}.<block>.<proj>``, plus ``lm_head``)
+        — precision policies/schedules are keyed per period POSITION, so a
+        name covers all ``n_periods`` stacked instances and its MAC count
+        carries that multiplicity.  MoE projections count only the
+        ``experts_per_token`` routed experts (the array work a token
+        actually buys); routers, convs and tied embeddings are not
+        quantized and are excluded, mirroring ``prepare_params``.
+
+        This is the per-layer workload vector ``repro.autoprec.cost``
+        prices precision assignments with."""
+        d, dh = self.d_model, self.head_dim or 0
+        n = self.n_periods
+        macs: dict[str, int] = {}
+        for i, (mixer, ff) in enumerate(self.period_pattern()):
+            base = f"layers.pos{i}"
+            if mixer == "attn":
+                macs[f"{base}.attn.q_proj"] = n * d * self.num_heads * dh
+                macs[f"{base}.attn.k_proj"] = n * d * self.num_kv_heads * dh
+                macs[f"{base}.attn.v_proj"] = n * d * self.num_kv_heads * dh
+                macs[f"{base}.attn.o_proj"] = n * self.num_heads * dh * d
+            else:
+                di, ns, hh = self.d_inner, self.ssm_state, self.ssm_heads
+                macs[f"{base}.mamba.in_proj"] = n * d * (2 * di + 2 * ns + hh)
+                macs[f"{base}.mamba.out_proj"] = n * di * d
+            if ff == "mlp":
+                macs[f"{base}.mlp.gate_proj"] = n * d * self.d_ff
+                macs[f"{base}.mlp.up_proj"] = n * d * self.d_ff
+                macs[f"{base}.mlp.down_proj"] = n * self.d_ff * d
+            elif ff == "moe":
+                k = self.experts_per_token
+                macs[f"{base}.moe.gate_proj"] = n * k * d * self.d_ff
+                macs[f"{base}.moe.up_proj"] = n * k * d * self.d_ff
+                macs[f"{base}.moe.down_proj"] = n * k * self.d_ff * d
+                if self.shared_expert:
+                    macs[f"{base}.moe.shared.gate_proj"] = n * d * self.d_ff
+                    macs[f"{base}.moe.shared.up_proj"] = n * d * self.d_ff
+                    macs[f"{base}.moe.shared.down_proj"] = n * self.d_ff * d
+        if not self.tie_embeddings:
+            macs["lm_head"] = d * self.padded_vocab
+        return macs

@@ -78,7 +78,7 @@ from repro.models.transformer import LM
 from repro.serve import slots as slots_lib
 from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler, SchedulerPolicy
+from repro.serve.scheduler import Scheduler, SchedulerPolicy, SLOPolicy
 
 __all__ = ["Request", "RequestHandle", "RequestStatus", "TokenEvent",
            "Engine", "ServeEngine", "BatchServeEngine", "EngineStats",
@@ -224,6 +224,7 @@ class EngineStats:
     mixed_tier_chunks: int = 0     # chunks serving >= 2 tiers in one batch
     tier_migrations: int = 0       # mid-stream set_tier on RUNNING requests
     kv_migrations: int = 0         # ... of which requantized a live KV lane
+    tier_autoselects: int = 0      # deadline-driven admission-time retags
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -569,6 +570,7 @@ class ServeEngine(_DeferredErrors):
                                            now=self.clock)
             if req is None:
                 break
+            self._auto_select_tier(req)
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
             kv_code = self.schedule.kv_code_for(req.tier) \
                 if self._mixed_kv else 0
@@ -588,6 +590,26 @@ class ServeEngine(_DeferredErrors):
             self._tok[slot] = first
             self._remaining[slot] = state.remaining
         return events
+
+    def _auto_select_tier(self, req: Request) -> None:
+        """Deadline-aware tier auto-selection at admission
+        (``SLOPolicy(auto_tier=True)``): retag the just-admitted request —
+        the same request-object retag a QUEUED ``set_tier`` performs, and
+        still before its slot prefills, so the new tier drives the prefill
+        dispatch, the slot's weight plane prefix AND its KV lane precision.
+        Mixed-tier admission only: a serialized batch is pinned to its
+        active tier.  Best-effort requests (no deadline) keep their
+        requested tier."""
+        pol = self.scheduler.policy
+        if (self.schedule is None or not self.mixed_tiers
+                or not isinstance(pol, SLOPolicy) or not pol.auto_tier):
+            return
+        tier = pol.select_tier(req, self.handles[req.uid].submitted_at,
+                               self.clock)
+        if tier is not None and tier != req.tier \
+                and tier in self.schedule.tiers:
+            req.tier = tier          # shared with handle and queue copy
+            self.stats.tier_autoselects += 1
 
     def _release_done(self) -> None:
         """Release exhausted slots and clear their arena tier tags."""

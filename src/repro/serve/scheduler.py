@@ -118,16 +118,33 @@ class SLOPolicy:
 
     ``tier_costs`` can be passed directly (tier name -> relative cost) or
     derived from a :class:`~repro.core.policy.PrecisionSchedule`; untiered
-    requests (tier None) cost ``default_cost``."""
+    requests (tier None) cost ``default_cost``.  ``mac_counts`` (layer ->
+    MACs per token, e.g. ``ArchConfig.quant_layer_macs()``) makes the
+    schedule-derived pricing rules-aware — required for tiers that differ
+    only in per-layer rules (searched ``repro.autoprec`` schedules) to
+    price differently at all.
+
+    ``auto_tier=True`` additionally enables deadline-aware tier
+    *auto-selection* at admission (:meth:`select_tier`): a deadlined
+    request whose tier's priced service time no longer fits its remaining
+    slack is retagged — the same request-object retag path a QUEUED
+    ``set_tier`` takes — to the highest-quality tier that still fits
+    (necessarily faster), so a tight-deadline request is admitted at a
+    faster tier instead of missing its deadline at the requested one.
+    Requests whose tier meets the deadline, and best-effort requests,
+    keep their requested tier."""
 
     def __init__(self, schedule: Optional[object] = None, *,
                  tier_costs: Optional[Dict[str, float]] = None,
-                 default_cost: float = 1.0) -> None:
+                 default_cost: float = 1.0,
+                 auto_tier: bool = False,
+                 mac_counts: Optional[Mapping[str, float]] = None) -> None:
         if tier_costs is None and schedule is not None:
             from repro.hwmodel.energy import relative_tier_costs
-            tier_costs = relative_tier_costs(schedule)
+            tier_costs = relative_tier_costs(schedule, mac_counts=mac_counts)
         self.tier_costs: Dict[str, float] = dict(tier_costs or {})
         self.default_cost = float(default_cost)
+        self.auto_tier = bool(auto_tier)
 
     def cost(self, tier: Optional[str]) -> float:
         """Relative per-token service cost of a tier (cheapest == 1.0)."""
@@ -162,6 +179,36 @@ class SLOPolicy:
                     submitted_at.get(r.uid, now), i)
 
         return min(range(len(candidates)), key=key)
+
+    def select_tier(self, request: Request, submitted_at_tick: float,
+                    now: float) -> Optional[str]:
+        """Deadline-aware tier auto-selection (``auto_tier`` mode).
+
+        Keep the request's own tier while its estimated service time
+        (``max_new_tokens * cost``) fits the remaining budget
+        (``submitted_at + deadline - now``); otherwise the
+        highest-quality (highest-cost) tier that does — necessarily a
+        FASTER one, since feasibility is monotone in cost — and the
+        cheapest (fastest) tier when none fits, so a late request at
+        least finishes as early as possible.  Requests are never upgraded
+        above their requested tier: auto-selection trades quality for the
+        deadline, not the reverse.  ``None`` (keep the requested tier)
+        for best-effort requests or when no tier costs are known.  Ties
+        break on the tier name so selection is deterministic."""
+        if request.deadline is None or not self.tier_costs:
+            return None
+        budget = submitted_at_tick + request.deadline - now
+
+        def fits(tier: str) -> bool:
+            return request.max_new_tokens * self.tier_costs[tier] <= budget
+
+        cur = request.tier
+        if cur is not None and cur in self.tier_costs and fits(cur):
+            return cur
+        feasible = [t for t in self.tier_costs if fits(t)]
+        if feasible:
+            return max(feasible, key=lambda t: (self.tier_costs[t], t))
+        return min(self.tier_costs, key=lambda t: (self.tier_costs[t], t))
 
 
 class Scheduler:

@@ -1,0 +1,399 @@
+"""repro.autoprec: hardware-aware automatic mixed-precision search.
+
+Covers the subsystem's contracts:
+
+* layer enumeration (``ArchConfig.quant_layer_macs``) names exactly the
+  projections ``prepare_params`` quantizes, across model families;
+* sensitivity is measured through the REAL quantization path: the batched
+  one-pass (mixed-tier row group) profiler is bit-identical to the
+  sequential per-tier profiler, and perturbing to 8 bits is exactly 0;
+* search: greedy trajectory properties, the differentiable relaxation
+  annealing to the separable optimum, Pareto pruning, and the repaired
+  ``allocate_bits_by_sensitivity`` (even defaults, budget respected, thin
+  wrapper over the same core);
+* persistence: JSON round-trip of a searched PrecisionSchedule is exact,
+  and an engine built from a LOADED schedule is token-identical to one
+  built from the in-memory original with zero weight re-preparations;
+* SLOPolicy deadline-aware tier auto-selection, unit + engine level;
+* the end-to-end invariant: ``repro.launch.autoprec`` emits a schedule
+  file whose loaded schedule validates (even bits only) and
+  Pareto-dominates the uniform-8 baseline on modeled cycles at small
+  measured divergence.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autoprec import (CostModel, SearchResult, greedy_search,
+                            greedy_trajectory, load_schedule,
+                            load_schedule_with_meta, pareto_front,
+                            profile_sensitivity, random_calibration,
+                            relaxed_search, save_schedule,
+                            schedule_from_dict, schedule_from_results,
+                            schedule_to_dict, search)
+from repro.configs import reduced_config
+from repro.core.decompose import RUNTIME_W_BITS
+from repro.core.policy import (LayerPrecision, PrecisionSchedule,
+                               allocate_bits_by_sensitivity,
+                               uniform_schedule)
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve import Request, ServeEngine, SLOPolicy
+from repro.serve import engine as engine_mod
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def calib(setup):
+    cfg, _, _ = setup
+    return random_calibration(cfg, batches=1, batch=2, seq=8, seed=3)
+
+
+# ----------------------------------------------------------- layer workload
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-1.3b",
+                                  "llama4-scout-17b-a16e"])
+def test_quant_layer_macs_names_match_prepared_weights(arch):
+    """The enumeration prices exactly the layers the engine quantizes —
+    dense attention+MLP, SSM projections, MoE experts (+ shared)."""
+    cfg = reduced_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.policy import uniform_policy
+    _, paths = engine_mod.prepare_params(
+        params, uniform_policy(8, 8, backend="decomposed"), model)
+    prepared = sorted(engine_mod._path_to_layer_name(p) for p in paths)
+    macs = cfg.quant_layer_macs()
+    assert sorted(macs) == prepared
+    assert all(isinstance(m, int) and m > 0 for m in macs.values())
+
+
+# ------------------------------------------------------------- sensitivity
+def test_batched_one_pass_profiler_matches_sequential(setup, calib):
+    """The one-pass mixed-tier row-group profiler is BIT-identical to the
+    sequential per-tier profiler (the PR-3 mixed-batch stability contract,
+    exercised on the full forward), and the 8-bit probe is exactly 0."""
+    cfg, model, params = setup
+    layers = ["layers.pos0.attn.q_proj", "layers.pos0.mlp.down_proj",
+              "lm_head"]
+    kw = dict(calib=calib, choices=(2, 4, 8), layers=layers)
+    prof_b = profile_sensitivity(model, params, batched=True, block=4, **kw)
+    prof_s = profile_sensitivity(model, params, batched=False, **kw)
+    for n in layers:
+        for b in (2, 4, 8):
+            assert prof_b.kl[n][b] == prof_s.kl[n][b], (n, b)
+            assert prof_b.mse[n][b] == prof_s.mse[n][b], (n, b)
+        assert prof_b.kl[n][8] == 0.0 and prof_b.mse[n][8] == 0.0
+        assert prof_b.kl[n][2] > 0.0       # truncation must actually bite
+        assert all(v >= 0.0 for v in prof_b.kl[n].values())
+    assert prof_b.table is prof_b.kl       # default metric
+
+
+# ------------------------------------------------------------------ search
+def _toy_sens_cost():
+    cfg = reduced_config("granite-3-8b")
+    cost = CostModel.for_config(cfg)
+    sens = {n: {2: 1.0 / (i + 1), 4: 0.25 / (i + 1), 6: 0.05 / (i + 1)}
+            for i, n in enumerate(cost.layers)}
+    return sens, cost
+
+
+def test_greedy_search_trajectory_properties():
+    sens, cost = _toy_sens_cost()
+    results = greedy_search(sens, cost, choices=(2, 4, 6, 8))
+    assert results[0].avg_bits == 2.0 and results[-1].avg_bits == 8.0
+    cycles = [r.cycles_per_token for r in results]
+    divs = [r.pred_divergence for r in results]
+    assert cycles == sorted(cycles)                  # cost only climbs
+    assert divs == sorted(divs, reverse=True)        # divergence only falls
+    assert all(b in (2, 4, 6, 8)
+               for r in results for b in r.assignment.values())
+    front = pareto_front(results)
+    assert len(front) >= 2
+    for a, b in zip(front, front[1:]):
+        assert b.cycles_per_token > a.cycles_per_token
+        assert b.divergence < a.divergence
+
+
+def test_relaxed_search_anneals_to_separable_optimum():
+    """With the additive surrogate, the annealed softmax must land on the
+    per-layer argmin of sens + lambda * cycles."""
+    sens, cost = _toy_sens_cost()
+    for lam in (1e-4, 1e-2):
+        (res,) = relaxed_search(sens, cost, choices=(2, 4, 6, 8),
+                                lambdas=[lam])
+        for layer in cost.layers:
+            want = min((2, 4, 6, 8), key=lambda b: (
+                (sens[layer].get(b, 0.0) if b < 8 else 0.0)
+                + lam * cost.layer_cycles(layer, b)))
+            assert res.assignment[layer] == want, (layer, lam)
+
+
+def test_search_merges_strategies_into_pareto_front():
+    sens, cost = _toy_sens_cost()
+    front = search(sens, cost, choices=(2, 4, 6, 8), strategy="both")
+    assert front and front[0].cycles_per_token < front[-1].cycles_per_token
+    with pytest.raises(ValueError):
+        search(sens, cost, strategy="bogus")
+
+
+def test_cost_model_validation_and_pricing():
+    _, cost = _toy_sens_cost()
+    uniform = {n: 8 for n in cost.layers}
+    assert cost.average_bits(uniform) == 8.0
+    assert cost.uniform_cycles(2) < cost.uniform_cycles(4) \
+        < cost.uniform_cycles(8)
+    with pytest.raises(KeyError):
+        cost.cycles_per_token({n: 8 for n in list(cost.layers)[1:]})
+    with pytest.raises(KeyError):
+        cost.cycles_per_token(dict(uniform, bogus=8))
+
+
+def test_allocator_defaults_even_and_respects_budget():
+    """The repaired classic allocator: even-only default choices (the
+    runtime superplane contract), budget respected, sensitivity ordering
+    preserved; odd widths remain available explicitly for the QAT path."""
+    sens = {"a": 10.0, "b": 1.0, "c": 0.1}
+    counts = {"a": 100, "b": 100, "c": 100}
+    pol = allocate_bits_by_sensitivity(sens, counts, avg_bits=4.0)
+    bits = {n: pol.lookup(n).w_bits for n in sens}
+    assert all(b in RUNTIME_W_BITS for b in bits.values())
+    assert bits["a"] >= bits["b"] >= bits["c"]
+    assert pol.average_bits(sens, [counts[n] for n in sens]) <= 4.0 + 1e-9
+    # Even-bit assignments drop straight into a PrecisionSchedule rule set.
+    PrecisionSchedule(tiers={"auto": LayerPrecision(backend="decomposed")},
+                      rules={"auto": {n: LayerPrecision(
+                          w_bits=b, backend="decomposed")
+                          for n, b in bits.items()}})
+    # Explicit odd choices stay allowed (fake-quant/QAT policies only).
+    pol_odd = allocate_bits_by_sensitivity(sens, counts, avg_bits=4.0,
+                                           choices=(2, 3, 4, 5, 6, 8))
+    assert all(2 <= pol_odd.lookup(n).w_bits <= 8 for n in sens)
+    with pytest.raises(ValueError):
+        allocate_bits_by_sensitivity(sens, counts, 4.0, choices=(1, 4))
+    with pytest.raises(ValueError):
+        allocate_bits_by_sensitivity(sens, counts, 4.0, choices=(4, 9))
+
+
+def test_greedy_trajectory_budget_retires_over_budget_layers():
+    sens = {"big": {2: 1.0, 4: 0.1}, "small": {2: 0.5, 4: 0.05}}
+    cost = {"big": {2: 200.0, 4: 400.0}, "small": {2: 2.0, 4: 4.0}}
+    traj = greedy_trajectory(["big", "small"], sens, cost, (2, 4),
+                             budget=210.0)
+    # Promoting "big" (rate 0.9/200) busts the budget; "small" (0.45/2)
+    # is promoted first anyway and fits.
+    assert traj[-1] == {"big": 2, "small": 4}
+
+
+# -------------------------------------------------------------- persistence
+def _searched_schedule():
+    base = LayerPrecision(w_bits=8, a_bits=8, backend="decomposed")
+    return PrecisionSchedule(
+        tiers={"auto": base, "base": base},
+        rules={"auto": {
+            "layers.pos0.attn.q_proj": dataclasses.replace(base, w_bits=4),
+            "layers.pos0.mlp.*": dataclasses.replace(base, w_bits=2),
+        }},
+        default_tier="auto",
+        kv_tiers={"auto": 8, "base": None})
+
+
+def test_schedule_json_roundtrip_is_exact(tmp_path):
+    sched = _searched_schedule()
+    assert schedule_from_dict(schedule_to_dict(sched)) == sched
+    # The policy-side hooks delegate to the same format.
+    assert PrecisionSchedule.from_json_dict(sched.to_json_dict()) == sched
+    path = str(tmp_path / "sched.json")
+    save_schedule(path, sched, meta={"note": "test"})
+    loaded, meta = load_schedule_with_meta(path)
+    assert loaded == sched
+    assert loaded.default_tier == "auto"
+    assert loaded.kv_tiers == {"auto": 8, "base": None}
+    assert meta == {"note": "test"}
+    assert load_schedule(path) == sched
+
+
+def test_schedule_file_validation_rejects_bad_contents(tmp_path):
+    sched = _searched_schedule()
+    d = schedule_to_dict(sched)
+    d["rules"]["auto"]["layers.pos0.attn.q_proj"]["w_bits"] = 5
+    with pytest.raises(ValueError):          # odd width: not truncatable
+        schedule_from_dict(d)
+    d2 = schedule_to_dict(sched)
+    del d2["tiers"]["auto"]["a_signed"]      # missing field -> ValueError,
+    with pytest.raises(ValueError):          # not a bare KeyError
+        schedule_from_dict(d2)
+    with pytest.raises(ValueError):
+        schedule_from_dict({"rules": {}})    # no tiers at all
+    path = str(tmp_path / "bogus.json")
+    with open(path, "w") as f:
+        f.write('{"format": "something.else", "schedule": {}}')
+    with pytest.raises(ValueError):
+        load_schedule(path)
+
+
+def test_schedule_from_results_validates_and_names_tiers():
+    res = SearchResult(assignment={"lm_head": 4}, a_bits=8, avg_bits=4.0,
+                       cycles_per_token=1.0, energy_per_token_j=1.0,
+                       pred_divergence=0.0, strategy="greedy")
+    sched = schedule_from_results([res], tier_names=["auto"])
+    assert sched.default_tier == "auto"
+    assert set(sched.tier_names) == {"auto", "base"}
+    assert sched.lookup("lm_head", "auto").w_bits == 4
+    assert sched.lookup("lm_head", "base").w_bits == 8
+    odd = dataclasses.replace(res, assignment={"lm_head": 3})
+    with pytest.raises(ValueError):
+        schedule_from_results([odd])
+    with pytest.raises(ValueError):
+        schedule_from_results([res], tier_names=["base"])
+    with pytest.raises(ValueError):
+        schedule_from_results([])
+
+
+# ------------------------------------------------------- SLO auto-selection
+def test_slo_policy_select_tier_unit():
+    pol = SLOPolicy(tier_costs={"8/8": 4.0, "4/4": 2.0, "2/2": 1.0},
+                    auto_tier=True)
+    assert pol.auto_tier
+    req = Request(uid=0, prompt=np.array([1]), max_new_tokens=10)
+    # Best-effort: keep the requested tier.
+    assert pol.select_tier(req, 0.0, 0.0) is None
+    # Loose deadline: the highest-quality tier fits.
+    loose = dataclasses.replace(req, deadline=100.0)
+    assert pol.select_tier(loose, 0.0, 0.0) == "8/8"
+    # Mid deadline: 8/8 (40 ticks) no longer fits, 4/4 (20) does.
+    mid = dataclasses.replace(req, deadline=25.0)
+    assert pol.select_tier(mid, 0.0, 0.0) == "4/4"
+    # Aged in queue: the remaining budget shrinks with `now`.
+    assert pol.select_tier(loose, 0.0, 90.0) == "2/2"
+    # Infeasible everywhere: fall back to the fastest tier.
+    tight = dataclasses.replace(req, deadline=5.0)
+    assert pol.select_tier(tight, 0.0, 0.0) == "2/2"
+    # No cost table: nothing to select with.
+    assert SLOPolicy(auto_tier=True).select_tier(loose, 0.0, 0.0) is None
+    # Cost ties keep the request's own tier (e.g. a searched schedule
+    # priced WITHOUT mac_counts: tiers differing only in per-layer rules
+    # collapse to one cost — switching buys nothing and must not happen).
+    flat = SLOPolicy(tier_costs={"auto": 1.0, "base": 1.0}, auto_tier=True)
+    tied = dataclasses.replace(req, deadline=100.0, tier="auto")
+    assert flat.select_tier(tied, 0.0, 0.0) == "auto"
+    assert flat.select_tier(dataclasses.replace(tied, deadline=1.0),
+                            0.0, 0.0) == "auto"
+
+
+def test_rules_aware_tier_pricing_with_mac_counts():
+    """relative_tier_costs(mac_counts=...) makes searched-schedule tiers
+    (per-layer rules over a common 8-bit default) price differently — the
+    hook `repro.launch.serve --schedule-file --slo` uses; without MAC
+    counts they collapse to identical costs.  For uniform tiers the
+    MAC-weighted pricing reduces exactly to the default pricing."""
+    from repro.hwmodel.energy import relative_tier_costs
+    cfg = reduced_config("granite-3-8b")
+    macs = cfg.quant_layer_macs()
+    searched = _searched_schedule()
+    flat = relative_tier_costs(searched)
+    assert flat["auto"] == flat["base"] == 1.0
+    priced = relative_tier_costs(searched, mac_counts=macs)
+    assert priced["auto"] < priced["base"] == max(priced.values())
+    pol = SLOPolicy(searched, auto_tier=True, mac_counts=macs)
+    assert pol.cost("auto") < pol.cost("base")
+    uniform = uniform_schedule({"8/8": (8, 8), "2/2": (2, 2)})
+    assert relative_tier_costs(uniform, mac_counts=macs) \
+        == pytest.approx(relative_tier_costs(uniform))
+
+
+def test_engine_auto_tier_admits_tight_deadline_faster(setup):
+    """Engine-level: with SLOPolicy(auto_tier=True), a tight-deadline
+    request admitted at the schedule's default 8/8 tier is retagged to the
+    faster 2/2 tier at admission (and decodes there), while a
+    loose-deadline request keeps the default."""
+    cfg, model, params = setup
+    sched = uniform_schedule({"8/8": (8, 8), "2/2": (2, 2)})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    pol = SLOPolicy(sched, auto_tier=True)
+    cost_slow = pol.cost("8/8")
+    assert cost_slow > pol.cost("2/2") == 1.0
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=32,
+                      decode_chunk=2, scheduler_policy=pol)
+    rng = np.random.default_rng(0)
+    max_new = 3
+    loose = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, size=4),
+                    max_new_tokens=max_new,
+                    deadline=10.0 * max_new * cost_slow)
+    # Feasible at 2/2 (cost 1.0) but NOT at 8/8.
+    tight = Request(uid=1, prompt=rng.integers(0, cfg.vocab_size, size=4),
+                    max_new_tokens=max_new,
+                    deadline=(max_new * cost_slow) / 2.0)
+    h_loose, h_tight = eng.submit(loose), eng.submit(tight)
+    events = eng.step()
+    assert h_loose.tier == "8/8"       # default kept: 8/8 fits its slack
+    assert h_tight.tier == "2/2"       # retagged at admission
+    assert eng.stats.tier_autoselects == 1
+    eng.drain()
+    assert {e.tier for e in h_tight.events} == {"2/2"}
+    assert {e.tier for e in h_loose.events} == {"8/8"}
+
+
+# ------------------------------------------------------------- end to end
+def test_autoprec_cli_end_to_end_and_serving(setup, tmp_path):
+    """The PR's acceptance invariant: the CLI writes a schedule file whose
+    loaded PrecisionSchedule (a) validates with even bits only, (b)
+    Pareto-dominates the uniform-8 baseline on modeled cycles within the
+    measured-divergence budget, and (c) serves through ServeEngine
+    token-identically to the in-memory original with zero weight
+    re-preparations."""
+    cfg, model, params = setup
+    from repro.launch.autoprec import main as autoprec_main
+    path = str(tmp_path / "auto_sched.json")
+    out = autoprec_main([
+        "--arch", "granite-3-8b", "--reduced", "--choices", "2", "4",
+        "--calib-batches", "1", "--calib-batch", "2", "--calib-len", "8",
+        "--eval-top", "3", "--max-divergence", "0.05", "--out", path])
+
+    loaded, meta = load_schedule_with_meta(path)
+    # (a) validates: even truncatable widths everywhere, serving backend.
+    assert loaded == out["schedule"]
+    assert all(p.w_bits in RUNTIME_W_BITS for p in loaded._all_precisions())
+    # (b) dominates uniform-8 on modeled cycles within the divergence
+    # budget — recomputed independently from the persisted assignment.
+    cost = CostModel.for_config(cfg)
+    selected = out["selected"]
+    assignment = {n: int(b)
+                  for n, b in meta["selected"]["assignment"].items()}
+    assert cost.cycles_per_token(assignment) \
+        == pytest.approx(selected.cycles_per_token)
+    assert selected.cycles_per_token < cost.uniform_cycles(8)
+    assert selected.measured_divergence <= 0.05
+    assert meta["pareto_front"], "front must be persisted"
+
+    # (c) serving parity: loaded vs in-memory schedule, one shared
+    # superplane store, zero preparations after construction.
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=3 + i % 3),
+                    max_new_tokens=2 + i % 2,
+                    tier=("auto", "base")[i % 2]) for i in range(4)]
+    rt_mem = Runtime(policy=out["schedule"].policy_for(), mode="serve",
+                     moe_dropless=True, schedule=out["schedule"])
+    eng_mem = ServeEngine(model, params, rt_mem, max_batch=2, max_len=32,
+                          decode_chunk=2)
+    rt_load = Runtime(policy=loaded.policy_for(), mode="serve",
+                      moe_dropless=True, schedule=loaded)
+    eng_load = ServeEngine(model, eng_mem.params, rt_load, max_batch=2,
+                           max_len=32, decode_chunk=2)
+    preps = engine_mod.PREPARE_CALLS
+    got_mem = eng_mem.run(reqs)
+    got_load = eng_load.run([dataclasses.replace(r) for r in reqs])
+    assert engine_mod.PREPARE_CALLS == preps, "re-prepared after construction"
+    assert got_mem == got_load
+    assert all(len(v) == r.max_new_tokens
+               for r, v in zip(reqs, got_mem.values()))

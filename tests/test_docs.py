@@ -36,9 +36,11 @@ def _exists_anywhere(path: str) -> bool:
 def test_docs_exist_and_are_linked_from_readme():
     assert os.path.isfile(os.path.join(REPO, "docs", "architecture.md"))
     assert os.path.isfile(os.path.join(REPO, "docs", "serving.md"))
+    assert os.path.isfile(os.path.join(REPO, "docs", "autoprec.md"))
     readme = open(os.path.join(REPO, "README.md")).read()
     assert "docs/architecture.md" in readme, "README must link the docs"
     assert "docs/serving.md" in readme, "README must link the docs"
+    assert "docs/autoprec.md" in readme, "README must link the docs"
 
 
 @pytest.mark.parametrize("doc", _doc_ids())

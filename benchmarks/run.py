@@ -364,6 +364,80 @@ def bench_serve_mixed_tiers():
          "token_identical_vs_fixed_tier=True")
 
 
+def bench_fused_decode():
+    """One-kernel mixed-tier decode vs the per-group loop it replaced.
+
+    Two engines over the SAME superplane store and mixed 8/4/2 request
+    stream: ``fused_decode=True`` (default — rmsnorm-fed activations
+    quantized ONCE per input with per-row ranges, one group-switching
+    grouped GEMM per projection) vs ``fused_decode=False`` (per-group
+    quantize + GEMM + dequant chain).  Asserts token identity (the
+    bitwise-stability contract) and — on the pallas backend, counted by
+    tracing — that the fused decode step's dispatch count is CONSTANT in
+    the number of tier groups and strictly below the per-group path's."""
+    from repro.configs import reduced_config
+    from repro.core.policy import uniform_schedule
+    from repro.models.layers import Runtime
+    from repro.models.transformer import LM
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    rng = np.random.default_rng(17)
+    params = model.init(jax.random.PRNGKey(0))
+    tiers = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+    kv_tiers = {"8/8": None, "4/4": 8, "2/2": 4}
+    sched = uniform_schedule(tiers, backend="decomposed", kv_tiers=kv_tiers)
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    names = list(tiers)
+    budgets = (8, 6, 7, 5, 8, 6)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=3 + i % 5),
+                    max_new_tokens=budgets[i], tier=names[i % 3])
+            for i in range(6)]
+
+    fused = ServeEngine(model, params, rt, max_batch=3, max_len=64,
+                        decode_chunk=4)
+    t0 = time.perf_counter()
+    got_f = fused.run(reqs)
+    dt_f = time.perf_counter() - t0
+
+    pergroup = ServeEngine(model, fused.params, rt, max_batch=3, max_len=64,
+                           decode_chunk=4, fused_decode=False)
+    t0 = time.perf_counter()
+    got_u = pergroup.run([Request(uid=r.uid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  tier=r.tier) for r in reqs])
+    dt_u = time.perf_counter() - t0
+    assert got_f == got_u, "fused decode changed tokens"
+
+    # Dispatches per jitted decode step, pallas backend (trace-only: the
+    # jaxpr is counted, nothing executes, so this runs on any host).
+    sched_p = uniform_schedule(tiers, backend="pallas", kv_tiers=kv_tiers)
+    rt_p = Runtime(policy=sched_p.policy_for(), mode="serve",
+                   moe_dropless=True, schedule=sched_p)
+    eng_pf = ServeEngine(model, params, rt_p, max_batch=4, max_len=64,
+                         decode_chunk=1)
+    eng_pu = ServeEngine(model, eng_pf.params, rt_p, max_batch=4, max_len=64,
+                         decode_chunk=1, fused_decode=False)
+    g2 = (("8/8", 2), ("4/4", 2))
+    g3 = (("8/8", 1), ("4/4", 2), ("2/2", 1))
+    nf2, nf3 = (eng_pf.decode_dispatch_count(groups=g) for g in (g2, g3))
+    nu2, nu3 = (eng_pu.decode_dispatch_count(groups=g) for g in (g2, g3))
+    assert nf2 == nf3, "fused dispatch count must not scale with groups"
+    assert nf3 < nu3, "fused path must dispatch fewer kernels"
+
+    toks = sum(len(v) for v in got_f.values())
+    _row("fused_decode", dt_f * 1e6 / max(len(reqs), 1),
+         f"tokens/s fused={toks/dt_f:.1f} per_group={toks/dt_u:.1f} "
+         f"dispatches/step 2-tier fused={nf2} per_group={nu2} "
+         f"3-tier fused={nf3} per_group={nu3} "
+         f"layout_cache={fused.stats.layout_cache_hits}h/"
+         f"{fused.stats.layout_cache_misses}m "
+         "token_identical=True")
+
+
 def bench_serve_slo_scheduling():
     """SLO-aware admission vs FIFO on a deadline-skewed mixed-tier trace.
 
@@ -545,6 +619,7 @@ BENCHES = {
     "serve_continuous_batching": bench_continuous_batching,
     "serve_precision_tiers": bench_serve_precision_tiers,
     "serve_mixed_tiers": bench_serve_mixed_tiers,
+    "fused_decode": bench_fused_decode,
     "serve_slo_scheduling": bench_serve_slo_scheduling,
     "autoprec_search": bench_autoprec_search,
     "dryrun_roofline": bench_dryrun_roofline_summary,

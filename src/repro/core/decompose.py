@@ -17,6 +17,7 @@ Planes are returned LSB-first: ``planes[c]`` has arithmetic weight ``4**c``.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 # MSB -> LSB chunk widths, straight from paper Table I.
 DECOMP_SCHEDULE: dict[int, tuple[int, ...]] = {
@@ -206,6 +207,65 @@ def decomposed_matmul_grouped(x_int, planes_msb, row_groups):
                                       eff_bits))
         off += rows
     return jnp.concatenate(outs, axis=0)
+
+
+def prefix_multipliers(plane_groups: tuple[tuple[int, int], ...]) -> np.ndarray:
+    """Per-row plane-multiplier table for group-switching GEMMs.
+
+    The multiplier table turns the per-group plane-prefix *loop* into data:
+    row ``r`` of a batch whose group serves ``P'`` MSB-first planes weighs
+    plane ``c`` by ``4**(P'-1-c)`` (exactly ``prefix_shifts``) and weighs
+    planes beyond its prefix by 0.  A single kernel can then walk ALL
+    ``Pmax`` planes and scale each plane's integer partial product by
+    ``mult[r, c]`` — rows of different effective widths share one grid, the
+    software analogue of the paper's spatial partial-sum combination.
+
+    Args:
+      plane_groups: static tuple of ``(rows, num_planes)`` per contiguous
+        group, MSB-first plane counts (``num_prefix_planes(eff_bits)``).
+
+    Returns:
+      np.int32 ``[sum(rows), max(num_planes)]`` — a compile-time constant.
+    """
+    pmax = max(p for _, p in plane_groups)
+    total = sum(r for r, _ in plane_groups)
+    mult = np.zeros((total, pmax), np.int32)
+    off = 0
+    for rows, p in plane_groups:
+        for c in range(p):
+            mult[off:off + rows, c] = 4 ** (p - 1 - c)
+        off += rows
+    return mult
+
+
+def decomposed_matmul_multipliers(x_int, planes_msb, mult):
+    """Multiplier-combine grouped GEMM: the plain-HLO twin of the fused
+    group-switching Pallas kernel.
+
+    Computes ``sum_c (x_int @ planes_msb[c]) * mult[:, c]`` in int32 — for a
+    table from :func:`prefix_multipliers` this equals
+    :func:`decomposed_matmul_grouped` bit-exactly (integer multiplication by
+    a power of four is an exact shift; integer addition is associative), but
+    with NO per-group dispatch: every row group rides the same ``Pmax``
+    matmuls.
+
+    Args:
+      x_int: int array [M, K] (quantized activations, group-sorted rows).
+      planes_msb: int8 [Pmax, K, N] MSB-first plane prefix (``Pmax`` =
+        widest group's plane count).
+      mult: int32 [M, Pmax] per-row plane multipliers.
+
+    Returns:
+      int32 [M, N] exact per-group MAC result.
+    """
+    x32 = x_int.astype(jnp.int32)
+    mult = jnp.asarray(mult, jnp.int32)
+    acc = None
+    for c in range(planes_msb.shape[0]):
+        part = jnp.matmul(x32, planes_msb[c].astype(jnp.int32))
+        part = part * mult[:, c:c + 1]
+        acc = part if acc is None else acc + part
+    return acc
 
 
 def decomposed_matmul(x_int, w_planes, w_bits: int):

@@ -8,24 +8,32 @@ scale.  Rows are the flattened (batch x seq) axis.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, q_ref, s_ref, *, qmin, qmax):
+def _kernel(x_ref: Any, q_ref: Any, s_ref: Any, *, qmin: int,
+            qmax: int) -> None:
     x = x_ref[...]
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
+    # Explicit f32 reciprocal-multiply: `amax / qmax` with a CONSTANT qmax
+    # is strength-reduced by XLA to `amax * (1/qmax)` under jit but stays a
+    # true division eagerly (and when qmax is a traced per-row array, as in
+    # _rows_kernel) — a 1-ulp scale drift that flips quant codes.  Writing
+    # the reciprocal out pins every variant to the same bits.
+    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / jnp.float32(qmax))
     q = jnp.clip(jnp.round(x / scale), qmin, qmax)
     q_ref[...] = q.astype(q_ref.dtype)
     s_ref[...] = scale.astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "signed", "bm", "interpret"))
-def act_quant(x, *, bits: int = 8, signed: bool = True, bm: int = 128,
-              interpret: bool = False):
+def act_quant(x: jax.Array, *, bits: int = 8, signed: bool = True,
+              bm: int = 128,
+              interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Per-row symmetric quantization. x: f32 [M, K] -> (int8 [M, K], f32 [M, 1]).
 
     M must tile by bm (ops.py pads); K is kept whole in VMEM (row reduction)."""
@@ -35,7 +43,7 @@ def act_quant(x, *, bits: int = 8, signed: bool = True, bm: int = 128,
     qmin = -(1 << (bits - 1)) if signed else 0
     qdtype = jnp.int8 if signed else jnp.uint8
 
-    return pl.pallas_call(
+    q, s = pl.pallas_call(
         functools.partial(_kernel, qmin=qmin, qmax=qmax),
         grid=(m // bm,),
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
@@ -49,3 +57,52 @@ def act_quant(x, *, bits: int = 8, signed: bool = True, bm: int = 128,
         ],
         interpret=interpret,
     )(x)
+    return q, s
+
+
+def _rows_kernel(x_ref: Any, qmax_ref: Any, q_ref: Any, s_ref: Any) -> None:
+    x = x_ref[...]
+    qmax = qmax_ref[...]                      # f32 [bm, 1], per-row
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # Same reciprocal-multiply form as _kernel (see comment there); 1/qmax
+    # is an exact-IEEE f32 division, matching the constant XLA folds.
+    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax)
+    q_ref[...] = q.astype(q_ref.dtype)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def act_quant_rows(x: jax.Array, qmax: jax.Array, *, bm: int = 128,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric quantization with a PER-ROW signed range.
+
+    The mixed-tier fused decode path quantizes rows of different ``a_bits``
+    in ONE kernel: ``qmax`` f32 [M, 1] carries each row's ``2^(b-1) - 1``
+    (exact in f32), ``qmin`` is ``-qmax - 1``.  Row-wise this is the exact
+    computation of :func:`act_quant` at that row's width — amax is an exact
+    max reduction and the divisor is the same f32 value — so results are
+    bit-identical to per-width calls.  x: f32 [M, K] ->
+    (int8 [M, K], f32 [M, 1]).  Padding rows should carry qmax=1."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    assert qmax.shape == (m, 1), (qmax.shape, m)
+
+    q, s = pl.pallas_call(
+        _rows_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, qmax)
+    return q, s

@@ -20,6 +20,7 @@ Block shapes default to MXU-aligned 128 multiples; the VMEM working set is
 from __future__ import annotations
 
 import functools
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +30,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import decompose
 
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk):
+def _kernel(x_ref: Any, w_ref: Any, o_ref: Any, acc_ref: Any, *,
+            shifts: Tuple[int, ...], nk: int) -> None:
     """One (i, j, k) grid step: acc += sum_c (x_blk @ w_blk[c]) << shifts[c]."""
 
     @pl.when(pl.program_id(2) == 0)
-    def _init():
+    def _init() -> None:
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]
@@ -48,16 +50,17 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, nk):
     acc_ref[...] = acc
 
     @pl.when(pl.program_id(2) == nk - 1)
-    def _flush():
+    def _flush() -> None:
         o_ref[...] = acc_ref[...]
 
 
 @functools.partial(
     jax.jit, static_argnames=("w_bits", "msb_first", "bm", "bn", "bk",
                               "interpret"))
-def bitserial_matmul(x, w_planes, *, w_bits: int, msb_first: bool = False,
+def bitserial_matmul(x: jax.Array, w_planes: jax.Array, *, w_bits: int,
+                     msb_first: bool = False,
                      bm: int = 128, bn: int = 128, bk: int = 128,
-                     interpret: bool = False):
+                     interpret: bool = False) -> jax.Array:
     """int32 [M, N] = sum_c (x int8 [M, K] @ w_planes[c] int8 [K, N]) << s_c.
 
     ``msb_first=False`` (prepared fixed-precision planes): s_c = 2c.
@@ -78,7 +81,7 @@ def bitserial_matmul(x, w_planes, *, w_bits: int, msb_first: bool = False,
     nk = k // bk
 
     grid = (m // bm, n // bn, nk)
-    return pl.pallas_call(
+    out: jax.Array = pl.pallas_call(
         functools.partial(_kernel, shifts=shifts, nk=nk),
         grid=grid,
         in_specs=[
@@ -90,9 +93,12 @@ def bitserial_matmul(x, w_planes, *, w_bits: int, msb_first: bool = False,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x, w_planes)
+    return out
 
 
-def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, base, nk, signed):
+def _packed_kernel(x_ref: Any, w_ref: Any, o_ref: Any, acc_ref: Any, *,
+                   shifts: Tuple[int, ...], base: int, nk: int,
+                   signed: bool) -> None:
     """Packed variant: weight planes packed 4-per-byte (2-bit fields) in one
     uint8 word per 4 planes; unpacked to int8 in VMEM before the MXU pass.
 
@@ -105,7 +111,7 @@ def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, base, nk, signed):
     serves every even effective width — fewer MXU passes, zero repacking."""
 
     @pl.when(pl.program_id(2) == 0)
-    def _init():
+    def _init() -> None:
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]
@@ -129,17 +135,17 @@ def _packed_kernel(x_ref, w_ref, o_ref, acc_ref, *, shifts, base, nk, signed):
     acc_ref[...] = acc
 
     @pl.when(pl.program_id(2) == nk - 1)
-    def _flush():
+    def _flush() -> None:
         o_ref[...] = acc_ref[...]
 
 
 @functools.partial(
     jax.jit, static_argnames=("w_bits", "eff_bits", "signed", "bm", "bn",
                               "bk", "interpret"))
-def packed_bitserial_matmul(x, w_packed, *, w_bits: int,
+def packed_bitserial_matmul(x: jax.Array, w_packed: jax.Array, *, w_bits: int,
                             eff_bits: int | None = None, signed: bool = True,
                             bm: int = 128, bn: int = 128, bk: int = 128,
-                            interpret: bool = False):
+                            interpret: bool = False) -> jax.Array:
     """Packed-plane GEMM: w_packed uint8 [K, N] holds all 2-bit planes of a
     2/4/6/8-bit weight in one byte (plane c at bit position 2c).
 
@@ -160,7 +166,7 @@ def packed_bitserial_matmul(x, w_packed, *, w_bits: int,
     nk = k // bk
 
     grid = (m // bm, n // bn, nk)
-    return pl.pallas_call(
+    out: jax.Array = pl.pallas_call(
         functools.partial(_packed_kernel, shifts=shifts, base=base, nk=nk,
                           signed=signed),
         grid=grid,
@@ -173,3 +179,4 @@ def packed_bitserial_matmul(x, w_packed, *, w_bits: int,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x, w_packed)
+    return out

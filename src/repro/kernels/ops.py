@@ -11,21 +11,36 @@ routes through one of four backends (see core.policy.BACKENDS):
 Weights for the integer paths are prepared once into a ``QuantizedWeight``
 (planes + per-channel scale) — the analogue of preloading decomposed weights
 into the array.
+
+Mixed-tier decode batches (``matmul(row_groups=, perm=)``) run FUSED by
+default: one per-row-range activation quantization + ONE group-switching
+plane-prefix GEMM with the dequant epilogue in its flush step
+(``fused_decode_linear``), instead of one dispatch chain per tier group.
+``fused=False`` keeps the per-group reference path, which the fused path is
+bit-identical to (tests/test_grouped_kernel.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import decompose, quant
 from repro.core.policy import LayerPrecision
 from repro.kernels import act_quant as act_quant_kernel
 from repro.kernels import bitserial_matmul as bsm
+from repro.kernels import grouped_matmul as gmm
 from repro.kernels import ref
+
+# (rows, LayerPrecision) per contiguous tier group — static, keys the trace.
+RowGroups = Tuple[Tuple[int, Any], ...]
+# Shared activation-quant cache: one entry per distinct quant config of ONE
+# input tensor (see quantize_activations_grouped).
+ActQuants = Dict[Any, Tuple[jax.Array, jax.Array]]
 
 
 def _on_tpu() -> bool:
@@ -55,22 +70,30 @@ class QuantizedWeight:
     msb_first: bool = False             # superplane store (see above)
 
     @property
-    def kn(self):
+    def kn(self) -> Tuple[int, int]:
         if self.planes is not None:
             return self.planes.shape[1], self.planes.shape[2]
+        assert self.packed is not None
         return self.packed.shape[0], self.packed.shape[1]
 
-    def get_planes(self):
+    def get_planes(self) -> jax.Array:
         """Planes in this artifact's declared order (MSB-first iff
         ``msb_first``); unpacks the byte layout on demand."""
         if self.planes is not None:
             return self.planes
+        assert self.packed is not None
         planes = unpack_planes(self.packed, self.w_bits, self.signed)
         return planes[::-1] if self.msb_first else planes
 
-    def eff_scale(self, eff_bits: int):
+    def get_planes_msb(self) -> jax.Array:
+        """Planes in MSB-first order regardless of the declared order."""
+        planes = self.get_planes()
+        return planes if self.msb_first else planes[::-1]
+
+    def eff_scale(self, eff_bits: int) -> jax.Array:
         """Per-channel scale of the ``eff_bits``-truncated weight."""
-        return quant.nested_scale(self.scale, self.w_bits, eff_bits)
+        return jnp.asarray(quant.nested_scale(self.scale, self.w_bits,
+                                              eff_bits))
 
 
 jax.tree_util.register_dataclass(
@@ -78,7 +101,7 @@ jax.tree_util.register_dataclass(
     meta_fields=["w_bits", "signed", "msb_first"])
 
 
-def prepare_weight(w, prec: LayerPrecision,
+def prepare_weight(w: jax.Array, prec: LayerPrecision,
                    packed: bool = False) -> QuantizedWeight:
     """Quantize (per-channel symmetric) + Table-I decompose a float weight
     at a fixed precision.
@@ -105,7 +128,7 @@ def prepare_weight(w, prec: LayerPrecision,
                            signed=prec.w_signed)
 
 
-def prepare_superplane(w, *, signed: bool = True,
+def prepare_superplane(w: jax.Array, *, signed: bool = True,
                        packed: bool = False) -> QuantizedWeight:
     """Quantize + decompose ONCE at 8 bits into the MSB-first superplane
     store — the single preloaded artifact that serves every even runtime
@@ -139,6 +162,7 @@ def truncate_weight(qw: QuantizedWeight, eff_bits: int) -> QuantizedWeight:
     if qw.packed is not None:
         planes_msb = unpack_planes(qw.packed, qw.w_bits, qw.signed)[::-1][:n]
     else:
+        assert qw.planes is not None
         planes_msb = qw.planes[:n]
     planes = planes_msb[::-1]
     if qw.packed is not None:
@@ -149,7 +173,7 @@ def truncate_weight(qw: QuantizedWeight, eff_bits: int) -> QuantizedWeight:
                            signed=qw.signed)
 
 
-def pack_planes(planes, w_bits: int):
+def pack_planes(planes: jax.Array, w_bits: int) -> jax.Array:
     """Pack all 2-bit planes into one uint8 per weight (even w_bits only).
 
     Plane c occupies bits [2c, 2c+1].  HBM weight bytes become K*N instead of
@@ -163,7 +187,8 @@ def pack_planes(planes, w_bits: int):
     return acc
 
 
-def unpack_planes(packed, w_bits: int, signed: bool = True):
+def unpack_planes(packed: jax.Array, w_bits: int,
+                  signed: bool = True) -> jax.Array:
     """Inverse of pack_planes (oracle for the packed kernel)."""
     p = decompose.num_planes(w_bits)
     planes = []
@@ -175,7 +200,7 @@ def unpack_planes(packed, w_bits: int, signed: bool = True):
     return jnp.stack(planes)
 
 
-def _pad_to(x, m, axis):
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
     r = x.shape[axis] % m
     if r == 0:
         return x
@@ -184,8 +209,9 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, pad)
 
 
-def quantize_activations(x, a_bits: int, *, signed: bool = True,
-                         use_pallas: Optional[bool] = None):
+def quantize_activations(
+        x: jax.Array, a_bits: int, *, signed: bool = True,
+        use_pallas: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """Per-row activation quantization.  x: f32 [..., K] -> (int8, scale).
 
     ``use_pallas=None`` routes to the fused Pallas kernel on TPU and to the
@@ -204,8 +230,9 @@ def quantize_activations(x, a_bits: int, *, signed: bool = True,
     return q.reshape(*lead, k), s.reshape(*lead, 1)
 
 
-def act_quant_pallas(x, *, a_bits: int = 8, signed: bool = True,
-                     interpret: Optional[bool] = None):
+def act_quant_pallas(
+        x: jax.Array, *, a_bits: int = 8, signed: bool = True,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """Direct Pallas activation-quant call (padded), for the serving hot path."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     lead, k = x.shape[:-1], x.shape[-1]
@@ -218,11 +245,30 @@ def act_quant_pallas(x, *, a_bits: int = 8, signed: bool = True,
     return q[:m].reshape(*lead, k), s[:m].reshape(*lead, 1)
 
 
-def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
+def _group_plane_counts(qw: QuantizedWeight,
+                        eff_list: Tuple[int, ...]) -> Tuple[int, ...]:
+    """MSB-first plane-prefix depth per group; validates the store serves
+    every requested effective width."""
+    counts = []
+    for eff in eff_list:
+        if eff != qw.w_bits and not qw.msb_first:
+            raise ValueError(
+                f"effective {eff}b from a fixed {qw.w_bits}b weight needs a "
+                "superplane (msb_first) store")
+        if qw.msb_first:
+            counts.append(decompose.num_prefix_planes(eff))
+        else:
+            counts.append(decompose.num_planes(qw.w_bits, qw.signed))
+    return tuple(counts)
+
+
+def bitserial_matmul_pallas(x_int8: jax.Array, qw: QuantizedWeight, *,
                             eff_bits: Optional[int] = None,
-                            row_groups: Optional[tuple] = None,
+                            row_groups: Optional[Tuple[Tuple[int, int], ...]]
+                            = None,
                             interpret: Optional[bool] = None,
-                            bm: int = 128, bn: int = 128, bk: int = 128):
+                            bm: int = 128, bn: int = 128,
+                            bk: int = 128) -> jax.Array:
     """Padded Pallas plane-GEMM: int8 [..., K] x planes -> int32 [..., N].
 
     ``eff_bits`` < qw.w_bits runtime-truncates a superplane store: the
@@ -232,20 +278,37 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
 
     ``row_groups`` (static tuple of ``(rows, eff_bits)``, covering x's
     leading axis) is the mixed-tier decode path: the batch is already
-    sorted into contiguous tier groups, one plane-prefix GEMM runs per
-    group (both the packed and unpacked kernels), and the per-group int32
-    results are reassembled along the leading axis."""
+    sorted into contiguous tier groups and ONE group-switching kernel
+    (``grouped_matmul``) serves every group from a single grid — per-row
+    plane multipliers select each row's plane-prefix depth, so no per-group
+    dispatch loop remains (bit-identical to per-group calls)."""
     if row_groups is not None:
         if sum(r for r, _ in row_groups) != x_int8.shape[0]:
             raise ValueError(f"row_groups {row_groups} do not cover leading "
                              f"axis {x_int8.shape[0]}")
-        outs, off = [], 0
-        for rows, eff in row_groups:
-            outs.append(bitserial_matmul_pallas(
-                x_int8[off:off + rows], qw, eff_bits=eff,
-                interpret=interpret, bm=bm, bn=bn, bk=bk))
-            off += rows
-        return jnp.concatenate(outs, axis=0)
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        k, n = qw.kn
+        lead = x_int8.shape[:-1]
+        x2 = x_int8.reshape(-1, k)
+        m = x2.shape[0]
+        reps = m // x_int8.shape[0]       # flat rows per leading row (static)
+        counts = _group_plane_counts(qw, tuple(e for _, e in row_groups))
+        plane_groups = tuple((rows * reps, p)
+                             for (rows, _), p in zip(row_groups, counts))
+        mult = jnp.asarray(decompose.prefix_multipliers(plane_groups))
+        pmax = int(mult.shape[1])
+        bm_eff = min(bm, max(8, m))
+        x2 = _pad_to(_pad_to(x2, bm_eff, 0), bk, 1)
+        multp = _pad_to(mult, bm_eff, 0)  # zero-multiplier rows stay inert
+        if qw.packed is not None:
+            wmat = _pad_to(_pad_to(qw.packed, bk, 0), bn, 1)
+        else:
+            wmat = _pad_to(_pad_to(qw.get_planes_msb()[:pmax], bk, 1), bn, 2)
+        out = gmm.grouped_matmul(
+            x2, wmat, multp, nplanes=pmax, packed=qw.packed is not None,
+            store_planes=decompose.num_planes(qw.w_bits, qw.signed),
+            signed=qw.signed, bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
+        return out[:m, :n].reshape(*lead, n)
     interpret = (not _on_tpu()) if interpret is None else interpret
     eff = qw.w_bits if eff_bits is None else eff_bits
     if eff != qw.w_bits and not qw.msb_first:
@@ -264,6 +327,7 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
             x2, packed, w_bits=qw.w_bits, eff_bits=eff, signed=qw.signed,
             bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
     else:
+        assert qw.planes is not None
         planes = qw.planes
         if qw.msb_first:
             planes = planes[: decompose.num_prefix_planes(eff)]
@@ -275,9 +339,170 @@ def bitserial_matmul_pallas(x_int8, qw: QuantizedWeight, *,
     return out[:m, :n].reshape(*lead, n)
 
 
-def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
+def _quantize_activations_rows(
+        x: jax.Array, row_groups: RowGroups, perm: Optional[jax.Array],
+        use_pallas: Optional[bool]) -> Tuple[jax.Array, jax.Array]:
+    """Mixed-width per-row activation quantization (signed), full batch.
+
+    Quantizes the UN-permuted batch in one pass — each row at its own
+    ``a_bits``, carried by a per-row f32 qmax — then gathers codes and
+    scales by ``perm``.  Row-wise bit-identical to the per-config
+    :func:`quantize_activations` (exact max reduction, same f32 divisor),
+    so the PR-3 bitwise-stability contract holds with ONE dispatch for any
+    mix of activation widths."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    lead, k = x.shape[:-1], x.shape[-1]
+    qmax_sorted = jnp.asarray(np.concatenate([
+        np.full((rows,), float((1 << (g.a_bits - 1)) - 1), np.float32)
+        for rows, g in row_groups]))
+    if perm is not None:
+        qmax_rows = jnp.take(qmax_sorted, jnp.argsort(perm), axis=0)
+    else:
+        qmax_rows = qmax_sorted
+    shape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    qmax_full = jnp.broadcast_to(qmax_rows.reshape(shape),
+                                 (*lead, 1)).reshape(-1, 1)
+    x2 = x.astype(jnp.float32).reshape(-1, k)
+    if use_pallas:
+        m = x2.shape[0]
+        bm = min(128, m) if m % 128 != 0 else 128
+        x2p = _pad_to(x2, bm, 0)
+        # Real qmax is always >= 1, so this only lifts zero padding rows.
+        qmaxp = jnp.maximum(_pad_to(qmax_full, bm, 0), 1.0)
+        q, s = act_quant_kernel.act_quant_rows(x2p, qmaxp, bm=bm,
+                                               interpret=not _on_tpu())
+        q, s = q[:m], s[:m]
+    else:
+        q, s = ref.act_quant_rows_ref(x2, qmax_full)
+    qr, sr = q.reshape(*lead, k), s.reshape(*lead, 1)
+    if perm is not None:
+        qr = jnp.take(qr, perm, axis=0)
+        sr = jnp.take(sr, perm, axis=0)
+    return qr, sr
+
+
+def quantize_activations_grouped(
+        x: jax.Array, row_groups: RowGroups, perm: Optional[jax.Array], *,
+        act_quants: Optional[ActQuants] = None,
+        use_pallas: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Activation quantization for a grouped batch, returned PERMUTED
+    (group-sorted).  Always quantizes the full un-permuted batch (the PR-3
+    bitwise-stability contract) and only gathers results.
+
+    One distinct (a_bits, a_signed) -> a single plain quantization; mixed
+    widths (all signed) -> ONE per-row-range pass.  ``act_quants`` is an
+    optional cache shared by projections reading the SAME input tensor
+    (q/k/v, gate/up): the second caller reuses the first caller's codes —
+    identical computation, so sharing is exact."""
+    if act_quants is None:
+        act_quants = {}
+    configs = tuple(dict.fromkeys((g.a_bits, g.a_signed)
+                                  for _, g in row_groups))
+    if len(configs) == 1:
+        a_bits, a_signed = configs[0]
+        key: Any = ("uniform", a_bits, a_signed)
+        if key not in act_quants:
+            act_quants[key] = quantize_activations(
+                x.astype(jnp.float32), a_bits, signed=a_signed,
+                use_pallas=use_pallas)
+        q, s = act_quants[key]
+        if perm is not None:
+            q = jnp.take(q, perm, axis=0)
+            s = jnp.take(s, perm, axis=0)
+        return q, s
+    if not all(g.a_signed for _, g in row_groups):
+        raise ValueError("mixed activation widths fuse only for signed "
+                         "activations (per-row qmin = -qmax - 1)")
+    key = ("rows",) + tuple((rows, g.a_bits) for rows, g in row_groups)
+    if key not in act_quants:
+        act_quants[key] = _quantize_activations_rows(x, row_groups, perm,
+                                                     use_pallas)
+    return act_quants[key]
+
+
+def fused_decode_linear(x: jax.Array, qw: QuantizedWeight,
+                        row_groups: RowGroups, perm: Optional[jax.Array], *,
+                        act_quants: Optional[ActQuants] = None,
+                        out_dtype: Any = None,
+                        interpret: Optional[bool] = None,
+                        bm: int = 128, bn: int = 128,
+                        bk: int = 128) -> jax.Array:
+    """The fused mixed-tier decode hot path, in two dispatches:
+
+      1. ONE activation quantization over the full un-permuted batch
+         (per-row ranges when groups mix ``a_bits``; shared across
+         projections of the same input via ``act_quants``);
+      2. ONE group-switching plane-prefix GEMM whose flush step applies
+         both scales (``grouped_dequant_matmul``) — the accumulator never
+         leaves VMEM unscaled.
+
+    Returns results in PERMUTED (group-sorted) order, like
+    ``matmul(row_groups=)``; bit-identical to the per-group path: integer
+    plane combination is exact, and the f32 dequant applies the same values
+    in the same order as ``_dequant_gemm``."""
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    backends = tuple(dict.fromkeys(g.backend for _, g in row_groups))
+    if len(backends) != 1 or backends[0] not in ("decomposed", "pallas"):
+        raise ValueError("fused grouped matmul needs one integer backend "
+                         f"across groups, got {backends}")
+    backend = backends[0]
+    x_q, x_s = quantize_activations_grouped(x, row_groups, perm,
+                                            act_quants=act_quants)
+    k, n = qw.kn
+    lead = x_q.shape[:-1]
+    reps = 1
+    for d in lead[1:]:
+        reps *= d
+    eff_list = tuple(min(g.w_bits, qw.w_bits) for _, g in row_groups)
+    counts = _group_plane_counts(qw, eff_list)
+    plane_groups = tuple((rows * reps, p)
+                         for (rows, _), p in zip(row_groups, counts))
+    mult = jnp.asarray(decompose.prefix_multipliers(plane_groups))
+    pmax = int(mult.shape[1])
+    # Per-ROW weight scale: each group's effective per-channel scale
+    # broadcast over its rows (an exact power-of-two multiple of the stored
+    # scale), so one grid dequantizes every tier correctly.
+    ws = jnp.concatenate([
+        jnp.broadcast_to(
+            jnp.asarray(qw.eff_scale(eff) if eff != qw.w_bits else qw.scale,
+                        jnp.float32).reshape(1, -1),
+            (rows * reps, n))
+        for (rows, _), eff in zip(row_groups, eff_list)], axis=0)
+    x2 = x_q.reshape(-1, k)
+    s2 = x_s.reshape(-1, 1)
+    if backend == "decomposed":
+        acc = decompose.decomposed_matmul_multipliers(
+            x2, qw.get_planes_msb()[:pmax], mult)
+        out = (acc.astype(jnp.float32) * s2 * ws).astype(out_dtype)
+        return out.reshape(*lead, n)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m = x2.shape[0]
+    bm_eff = min(bm, max(8, m))
+    x2p = _pad_to(_pad_to(x2, bm_eff, 0), bk, 1)
+    multp = _pad_to(mult, bm_eff, 0)
+    s2p = _pad_to(s2, bm_eff, 0)
+    wsp = _pad_to(_pad_to(ws, bm_eff, 0), bn, 1)
+    if qw.packed is not None:
+        wmat = _pad_to(_pad_to(qw.packed, bk, 0), bn, 1)
+    else:
+        wmat = _pad_to(_pad_to(qw.get_planes_msb()[:pmax], bk, 1), bn, 2)
+    out = gmm.grouped_dequant_matmul(
+        x2p, wmat, multp, s2p, wsp, nplanes=pmax,
+        packed=qw.packed is not None,
+        store_planes=decompose.num_planes(qw.w_bits, qw.signed),
+        signed=qw.signed, out_dtype=out_dtype,
+        bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def matmul(x: jax.Array, w: Optional[jax.Array], prec: LayerPrecision, *,
+           qw: Optional[QuantizedWeight] = None,
            a_signed: Optional[bool] = None,
-           row_groups: Optional[tuple] = None, perm=None):
+           row_groups: Optional[RowGroups] = None,
+           perm: Optional[jax.Array] = None,
+           fused: Optional[bool] = None,
+           act_quants: Optional[ActQuants] = None) -> jax.Array:
     """The framework's matmul: y = x @ w under a mixed-precision policy.
 
     x: f32/bf16 [..., K].  w: float [K, N] (dense / fake_quant) — for the
@@ -287,16 +512,20 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
     ``row_groups`` (static tuple of ``(rows, LayerPrecision)``) is the
     mixed-tier decode-batch path: the batch's rows, viewed through the
     (traced) permutation ``perm`` (identity if None), form contiguous tier
-    groups; every group runs one plane-prefix GEMM at ITS w_bits with
-    activations quantized at ITS a_bits against the shared superplane store
-    ``qw``, and the per-group results are reassembled IN PERMUTED ORDER
-    (the caller inverts the permutation).  Activation quantization runs on
-    the full un-permuted batch — one pass per distinct (a_bits, a_signed) —
-    and only the integer codes and already-materialized scales are
-    gathered, so every row's codes AND scales are bitwise identical to a
-    tier-homogeneous dispatch (see :func:`_integer_matmul` for why that
-    matters).  ``row_groups`` must be static (it keys the jit trace);
-    ``prec`` is ignored when it is given.
+    groups; every group runs at ITS (w_bits, a_bits) against the shared
+    superplane store ``qw``, and results come back IN PERMUTED ORDER (the
+    caller inverts the permutation).  Activation quantization runs on the
+    full un-permuted batch — so every row's codes AND scales are bitwise
+    identical to a tier-homogeneous dispatch (see :func:`_integer_matmul`
+    for why that matters).  ``row_groups`` must be static (it keys the jit
+    trace); ``prec`` is ignored when it is given.
+
+    ``fused`` selects the grouped implementation: ``None`` (default) fuses
+    whenever eligible (one integer backend, signed activations), ``False``
+    forces the per-group reference loop, ``True`` asserts eligibility.
+    ``act_quants`` optionally shares activation quantization between
+    projections of the same input (exact; see
+    :func:`quantize_activations_grouped`).
     """
     if row_groups is not None:
         if qw is None:
@@ -310,20 +539,32 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
             # Keep the contract: grouped results come back in PERMUTED
             # order (gathering finished rows is exact).
             return y if perm is None else jnp.take(y, perm, axis=0)
-        # One full-batch activation quantization per distinct a-config, on
-        # the UN-permuted x (bitwise identical to the homogeneous path).
-        quants = {}
+        eligible = (
+            len({g.backend for _, g in row_groups}) == 1
+            and row_groups[0][1].backend in ("decomposed", "pallas")
+            and all(g.a_signed for _, g in row_groups))
+        use_fused = eligible if fused is None else fused
+        if use_fused:
+            # Raises with the precise reason if fused=True yet ineligible.
+            return fused_decode_linear(x, qw, row_groups, perm,
+                                       act_quants=act_quants,
+                                       out_dtype=x.dtype)
+        # Per-group reference path: one full-batch activation quantization
+        # per distinct a-config, on the UN-permuted x (bitwise identical to
+        # the homogeneous path), then one plane-prefix GEMM per group.
+        quants: Dict[Tuple[int, bool], Tuple[jax.Array, jax.Array]] = {}
         for _, gprec in row_groups:
-            key = (gprec.a_bits, gprec.a_signed)
-            if key not in quants:
+            gkey = (gprec.a_bits, gprec.a_signed)
+            if gkey not in quants:
                 q, s = quantize_activations(x.astype(jnp.float32),
                                             gprec.a_bits,
                                             signed=gprec.a_signed)
                 if perm is not None:
                     q = jnp.take(q, perm, axis=0)
                     s = jnp.take(s, perm, axis=0)
-                quants[key] = (q, s)
-        outs, off = [], 0
+                quants[gkey] = (q, s)
+        outs = []
+        off = 0
         for rows, gprec in row_groups:
             x_q, x_s = quants[(gprec.a_bits, gprec.a_signed)]
             sl = slice(off, off + rows)
@@ -334,9 +575,11 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
     backend = prec.backend
 
     if backend == "dense":
+        assert w is not None
         return jnp.matmul(x, w.astype(x.dtype))
 
     if backend == "fake_quant":
+        assert w is not None
         wcfg = quant.QuantConfig(bits=prec.w_bits, signed=prec.w_signed,
                                  per_channel=True, channel_axis=-1)
         acfg = quant.QuantConfig(bits=prec.a_bits, signed=a_signed,
@@ -350,11 +593,13 @@ def matmul(x, w, prec: LayerPrecision, *, qw: Optional[QuantizedWeight] = None,
         return jnp.matmul(xq, wq)
 
     if qw is None:
+        assert w is not None
         qw = prepare_weight(w.astype(jnp.float32), prec)
     return _integer_matmul(x, qw, prec, a_signed)
 
 
-def _integer_matmul(x, qw: QuantizedWeight, prec: LayerPrecision, a_signed):
+def _integer_matmul(x: jax.Array, qw: QuantizedWeight, prec: LayerPrecision,
+                    a_signed: bool) -> jax.Array:
     """Shared integer path: act-quant + plane-prefix GEMM + dequant.
 
     Bitwise-stability note (the mixed-tier token-identity contract): the
@@ -370,8 +615,8 @@ def _integer_matmul(x, qw: QuantizedWeight, prec: LayerPrecision, a_signed):
     return _dequant_gemm(x_q, x_s, qw, prec, x.dtype)
 
 
-def _dequant_gemm(x_q, x_s, qw: QuantizedWeight, prec: LayerPrecision,
-                  out_dtype):
+def _dequant_gemm(x_q: jax.Array, x_s: jax.Array, qw: QuantizedWeight,
+                  prec: LayerPrecision, out_dtype: Any) -> jax.Array:
     """Plane-prefix GEMM on quantized activations + scale-out.
 
     Runtime precision: the effective width is the POLICY's w_bits, the
@@ -388,10 +633,33 @@ def _dequant_gemm(x_q, x_s, qw: QuantizedWeight, prec: LayerPrecision,
         planes = qw.get_planes()
         if qw.msb_first:
             planes = planes[: decompose.num_prefix_planes(eff_bits)][::-1]
-        acc = decompose.decomposed_matmul(x_q, planes, eff_bits)
+        acc = jnp.asarray(decompose.decomposed_matmul(x_q, planes, eff_bits))
     elif backend == "pallas":
         acc = bitserial_matmul_pallas(x_q, qw, eff_bits=eff_bits)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     w_s = qw.eff_scale(eff_bits) if eff_bits != qw.w_bits else qw.scale
     return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)
+
+
+def count_pallas_calls(jaxpr: Any) -> int:
+    """Count ``pallas_call`` equations in a (Closed)Jaxpr, recursing into
+    sub-jaxprs (scan/pjit/cond bodies) — the dispatch-count observability
+    behind ``EngineStats.decode_dispatches``: a fused mixed-tier decode
+    step's count is CONSTANT in the number of tier groups."""
+    core = getattr(jaxpr, "jaxpr", jaxpr)
+    count = 0
+    for eqn in core.eqns:
+        if eqn.primitive.name == "pallas_call":
+            count += 1
+        for v in eqn.params.values():
+            count += _count_pallas_in_param(v)
+    return count
+
+
+def _count_pallas_in_param(v: Any) -> int:
+    if isinstance(v, (tuple, list)):
+        return sum(_count_pallas_in_param(u) for u in v)
+    if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+        return count_pallas_calls(v)
+    return 0

@@ -4,41 +4,63 @@ Each oracle is the semantic ground truth its kernel is property-tested
 against (bit-exact for the integer paths)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import decompose
 
 
-def bitserial_matmul_ref(x_int, w_planes, w_bits: int):
+def bitserial_matmul_ref(x_int: jax.Array, w_planes: jax.Array,
+                         w_bits: int) -> jax.Array:
     """int32 [..., N] = sum_c (x @ w_planes[c]) << 2c   (paper Eq. (1) with the
     temporal bit-loop folded into the int operand)."""
-    return decompose.decomposed_matmul(x_int, w_planes, w_bits)
+    return jnp.asarray(decompose.decomposed_matmul(x_int, w_planes, w_bits))
 
 
-def packed_bitserial_matmul_ref(x_int, w_packed, w_bits: int, k: int):
+def packed_bitserial_matmul_ref(x_int: jax.Array, w_packed: jax.Array,
+                                w_bits: int, k: int) -> jax.Array:
     """Oracle for the packed-plane kernel: unpack then decomposed matmul.
 
     w_packed: uint8 [ceil(K*w_bits/8)...] packed rows — see ops.pack_planes.
     Here we accept the unpacked planes directly for simplicity; packing is
     tested by pack/unpack roundtrip plus this oracle on the unpacked form.
     """
-    return decompose.decomposed_matmul(x_int, w_packed, w_bits)
+    return jnp.asarray(decompose.decomposed_matmul(x_int, w_packed, w_bits))
 
 
-def act_quant_ref(x, bits: int = 8, signed: bool = True):
+def act_quant_ref(x: jax.Array, bits: int = 8,
+                  signed: bool = True) -> tuple[jax.Array, jax.Array]:
     """Per-row symmetric activation quantization oracle.
 
     Returns (q int8 [M,K], scale f32 [M,1])."""
     qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
     qmin = -(1 << (bits - 1)) if signed else 0
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
+    # Reciprocal-multiply, not `/ qmax`: XLA strength-reduces division by a
+    # constant under jit but not eagerly (nor for traced per-row ranges in
+    # act_quant_rows_ref) — writing `* (1/qmax)` pins all paths to one bit
+    # pattern.  Mirrors kernels/act_quant.py.
+    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / jnp.float32(qmax))
     dtype = jnp.int8 if signed else jnp.uint8   # unsigned 8-bit needs uint8
     q = jnp.clip(jnp.round(x / scale), qmin, qmax).astype(dtype)
     return q, scale.astype(jnp.float32)
 
 
-def quantized_matmul_ref(x, w_planes, w_scale, w_bits: int, a_bits: int = 8):
+def act_quant_rows_ref(x: jax.Array,
+                       qmax: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row-range quantization oracle (signed): ``qmax`` f32 [M, 1] carries
+    each row's ``2^(b-1) - 1``.  Row-wise bit-identical to
+    :func:`act_quant_ref` at that row's width (same f32 divisor, exact max
+    reduction).  Returns (q int8 [M,K], scale f32 [M,1])."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantized_matmul_ref(x: jax.Array, w_planes: jax.Array,
+                         w_scale: jax.Array, w_bits: int,
+                         a_bits: int = 8) -> jax.Array:
     """Float-in/float-out oracle: quantize acts per-row, integer decomposed
     matmul, dequantize with both scales."""
     q, s = act_quant_ref(x, bits=a_bits)

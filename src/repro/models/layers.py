@@ -37,7 +37,10 @@ class Runtime:
       (it keys the jit trace), while ``perm``/``inv_perm`` are TRACED
       int32 [B] arrays mapping batch rows into/out of that sorted order
       (they change per step without retracing).  Every projection then
-      runs one plane-prefix GEMM per group (see :func:`linear`).
+      runs the grouped path (see :func:`linear`): with ``fused`` (default)
+      ONE group-switching plane-prefix GEMM serves all groups
+      (``ops.fused_decode_linear``); ``fused=False`` keeps the per-group
+      dispatch loop as the bit-identical reference.
     """
 
     policy: PrecisionPolicy
@@ -52,6 +55,7 @@ class Runtime:
     groups: Optional[tuple] = None      # STATIC ((tier_name, rows), ...)
     perm: Optional[Any] = None          # TRACED int32 [B]: tier-sorted order
     inv_perm: Optional[Any] = None      # TRACED int32 [B]: inverse of perm
+    fused: bool = True                  # one-kernel mixed-tier grouped GEMMs
 
     def prec(self, name: str) -> LayerPrecision:
         if self.schedule is not None:
@@ -97,17 +101,25 @@ def _serve_backend(prec: LayerPrecision) -> LayerPrecision:
         else "decomposed")
 
 
-def linear(params, x, rt: Runtime, name: str):
+def linear(params, x, rt: Runtime, name: str, *,
+           act_quants: Optional[Dict[Any, Any]] = None):
     """y = x @ w under the mixed-precision policy (w may be a prepared
     QuantizedWeight for the serving path).
 
     Under a mixed-tier runtime (``rt.groups`` set) every prepared-weight
     matmul takes the per-row-group path: gather batch rows into tier-sorted
-    order (``rt.perm``), run one plane-prefix GEMM per contiguous group at
-    that group's (w_bits, a_bits), and scatter back (``rt.inv_perm``).  The
-    leading axis of ``x`` must be the slot-batch axis — true for every
-    projection in the decode path (attention/MLP/SSM projections, per-expert
-    MoE FFNs after the per-sequence dispatch, and the LM head)."""
+    order (``rt.perm``), run the grouped plane-prefix GEMM (one fused
+    group-switching kernel when ``rt.fused``, else one GEMM per contiguous
+    group) at each group's (w_bits, a_bits), and scatter back
+    (``rt.inv_perm``).  The leading axis of ``x`` must be the slot-batch
+    axis — true for every projection in the decode path (attention/MLP/SSM
+    projections, per-expert MoE FFNs after the per-sequence dispatch, and
+    the LM head).
+
+    ``act_quants`` is a per-input activation-quant cache: projections that
+    read the SAME tensor (q/k/v, gate/up) pass one shared dict so the batch
+    is quantized once per distinct config instead of once per projection —
+    identical computation, so sharing is exact."""
     w = params["w"]
     if isinstance(w, ops.QuantizedWeight):
         if rt.groups is not None:
@@ -129,7 +141,9 @@ def linear(params, x, rt: Runtime, name: str):
             # grouped result comes back in sorted order and is scattered
             # back to slot order here.
             yg = ops.matmul(x, None, row_groups[0][1], qw=w,
-                            row_groups=row_groups, perm=rt.perm)
+                            row_groups=row_groups, perm=rt.perm,
+                            fused=None if rt.fused else False,
+                            act_quants=act_quants)
             return jnp.take(yg, rt.inv_perm, axis=0)
         return ops.matmul(x, None, _serve_backend(rt.prec(name)), qw=w)
     y = ops.matmul(x, w, rt.prec(name))
@@ -637,9 +651,14 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
         positions = base + jnp.arange(s)[None, :].astype(jnp.int32)
         positions = jnp.broadcast_to(positions, (b, s))
 
-    q = linear(params["q_proj"], x, rt, f"{name}.q_proj").reshape(b, s, h, dh)
-    k = linear(params["k_proj"], x, rt, f"{name}.k_proj").reshape(b, s, kvh, dh)
-    v = linear(params["v_proj"], x, rt, f"{name}.v_proj").reshape(b, s, kvh, dh)
+    # q/k/v read the same x: share one activation quantization (exact).
+    acts: Dict[Any, Any] = {}
+    q = linear(params["q_proj"], x, rt, f"{name}.q_proj",
+               act_quants=acts).reshape(b, s, h, dh)
+    k = linear(params["k_proj"], x, rt, f"{name}.k_proj",
+               act_quants=acts).reshape(b, s, kvh, dh)
+    v = linear(params["v_proj"], x, rt, f"{name}.v_proj",
+               act_quants=acts).reshape(b, s, kvh, dh)
     if cfg.qk_norm:
         q = qk_headnorm(params["q_norm"], q)
         k = qk_headnorm(params["k_norm"], k)
@@ -678,8 +697,11 @@ def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
 
 
 def mlp_apply(params, x, rt: Runtime, name: str):
-    gate = linear(params["gate_proj"], x, rt, f"{name}.gate_proj")
-    up = linear(params["up_proj"], x, rt, f"{name}.up_proj")
+    # gate/up read the same x: share one activation quantization (exact).
+    acts: Dict[Any, Any] = {}
+    gate = linear(params["gate_proj"], x, rt, f"{name}.gate_proj",
+                  act_quants=acts)
+    up = linear(params["up_proj"], x, rt, f"{name}.up_proj", act_quants=acts)
     hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     hidden = shard(hidden, "batch", None, "model")
     return linear(params["down_proj"], hidden, rt, f"{name}.down_proj")

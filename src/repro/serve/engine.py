@@ -225,9 +225,17 @@ class EngineStats:
     tier_migrations: int = 0       # mid-stream set_tier on RUNNING requests
     kv_migrations: int = 0         # ... of which requantized a live KV lane
     tier_autoselects: int = 0      # deadline-driven admission-time retags
+    layout_cache_hits: int = 0     # group-layout derivations skipped (cache)
+    layout_cache_misses: int = 0   # group-layout derivations performed
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Dispatch-count observability (ServeEngine(count_dispatches=True)):
+    # per group layout, the jaxpr ``pallas_call`` count of ONE jitted decode
+    # step — with the fused grouped kernel this is CONSTANT in the number of
+    # tier groups (asserted in tests/test_grouped_kernel.py).
+    decode_dispatches: Dict[Any, int] = dataclasses.field(
+        default_factory=dict)
 
 
 class _DeferredErrors:
@@ -318,9 +326,16 @@ class ServeEngine(_DeferredErrors):
                  kv_bits: Optional[int] = None, decode_chunk: int = 8,
                  prompt_bucket: int = 8, packed: bool = False,
                  mixed_tiers: bool = True,
+                 fused_decode: bool = True,
+                 count_dispatches: bool = False,
                  scheduler_policy: Optional[SchedulerPolicy] = None) -> None:
         self.model = model
-        self.rt = rt
+        # ``fused_decode`` selects the mixed-tier grouped-matmul
+        # implementation: one group-switching kernel (default) vs the
+        # per-group dispatch loop (bit-identical reference).
+        self.rt = dataclasses.replace(rt, fused=fused_decode)
+        self.fused_decode = fused_decode
+        self.count_dispatches = count_dispatches
         self.max_batch = max_batch
         self.max_len = max_len
         self.kv_bits = kv_bits
@@ -355,6 +370,12 @@ class ServeEngine(_DeferredErrors):
                                          kv_bits=arena_kv)
         self.scheduler = Scheduler(max_batch, policy=scheduler_policy)
         self.stats = EngineStats()
+        # Group-layout memo: slot-tier vector -> (groups, perm).  Recurring
+        # mixed-batch layouts (the steady state) skip the per-step Python
+        # sort; hits/misses are surfaced on EngineStats.
+        self._layout_cache: Dict[Tuple[Optional[str], ...],
+                                 Tuple[GroupLayout,
+                                       npt.NDArray[np.int32]]] = {}
         self.handles: Dict[int, RequestHandle] = {}
         self._seen_uids: Set[int] = set()
         # Host-mirrored per-slot decode state.
@@ -421,12 +442,39 @@ class ServeEngine(_DeferredErrors):
 
         self._prefill_slot = jax.jit(prefill_slot,
                                      static_argnames=("tier",))
+        # Un-jitted handle kept for trace-only introspection
+        # (decode_dispatch_count): jax.make_jaxpr stages the step without
+        # running it.
+        self._decode_chunk_fn = decode_chunk_fn
         self._decode_chunk = jax.jit(decode_chunk_fn,
                                      static_argnames=("n_steps", "tier",
                                                       "groups"))
         # Mid-stream KV migration: one jitted requantize serves every
         # (slot, from-tier, to-tier) combination — slot and code are traced.
         self._migrate_kv = jax.jit(slots_lib.migrate_kv_tier)
+
+    # ----------------------------------------------------- dispatch counting
+    def decode_dispatch_count(self, *, groups: Optional[GroupLayout] = None,
+                              tier: Optional[str] = None,
+                              n_steps: int = 1) -> int:
+        """Pallas dispatches of ONE jitted decode chunk for a given layout.
+
+        Traces the decode step (``jax.make_jaxpr`` — nothing executes, no
+        device work) and counts ``pallas_call`` equations, recursing into
+        the scan body.  With the fused grouped path this count is CONSTANT
+        in the number of tier groups; the per-group path pays one GEMM
+        dispatch chain per group.  Keys ``EngineStats.decode_dispatches``
+        when ``count_dispatches=True``."""
+        perm = jnp.arange(self.max_batch, dtype=jnp.int32)
+
+        def chunk(p: Any, c: Any, t: Any, r: Any, pm: Any) -> Any:
+            return self._decode_chunk_fn(p, c, t, r, pm, n_steps, tier,
+                                         groups)
+
+        closed = jax.make_jaxpr(chunk)(
+            self.params, self.arena.caches, jnp.asarray(self._tok),
+            jnp.asarray(self._remaining), perm)
+        return ops.count_pallas_calls(closed)
 
     # ------------------------------------------------------------------ clock
     @property
@@ -624,9 +672,20 @@ class ServeEngine(_DeferredErrors):
         the default tier's group — their lanes are masked anyway), ``perm``
         the TRACED int32 [B] slot order realizing it.  The jit key space is
         the set of tier multisets over ``max_batch`` slots, not the set of
-        slot assignments."""
+        slot assignments.
+
+        Derivations are memoized on the slot-tier vector
+        (``EngineStats.layout_cache_hits`` / ``layout_cache_misses``): the
+        steady state of a serving loop repeats a handful of layouts, so the
+        per-step host work collapses to one dict lookup."""
         schedule = self.schedule
         assert schedule is not None
+        cache_key = tuple(self.arena.tiers)
+        cached = self._layout_cache.get(cache_key)
+        if cached is not None:
+            self.stats.layout_cache_hits += 1
+            return cached
+        self.stats.layout_cache_misses += 1
         rank = {t: i for i, t in enumerate(schedule.tier_names)}
         default = schedule.default_tier
         slot_tiers = [t if t is not None else default
@@ -640,8 +699,10 @@ class ServeEngine(_DeferredErrors):
                 groups[-1][1] += 1
             else:
                 groups.append([t, 1])
-        return (tuple((t, n) for t, n in groups),
-                np.asarray(order, np.int32))
+        layout = (tuple((t, n) for t, n in groups),
+                  np.asarray(order, np.int32))
+        self._layout_cache[cache_key] = layout
+        return layout
 
     # ------------------------------------------------------------------- run
     def step(self) -> List[TokenEvent]:
@@ -670,6 +731,10 @@ class ServeEngine(_DeferredErrors):
         if self.schedule is not None and self.mixed_tiers:
             groups, perm = self._group_layout()
             tier = None
+            if self.count_dispatches \
+                    and groups not in self.stats.decode_dispatches:
+                self.stats.decode_dispatches[groups] = \
+                    self.decode_dispatch_count(groups=groups)
         else:
             groups, perm = None, np.zeros((self.max_batch,), np.int32)
             tier = self._active_tier

@@ -1,0 +1,284 @@
+"""One-kernel mixed-tier decode: group-switching GEMM + fused hot path.
+
+Bit-identity contract (interpret mode, CPU):
+
+  * ``grouped_matmul`` (one Pallas dispatch, per-row-block plane-prefix
+    depth via the multiplier table) == per-group ``bitserial_matmul`` /
+    ``packed_bitserial_matmul`` calls == ``decompose.decomposed_matmul_
+    grouped`` — across all even tiers, signedness, packed/unpacked stores
+    and non-trivial permutations;
+  * ``ops.matmul(fused=True)`` == the per-group legacy loop
+    (``fused=False``), eager AND jitted;
+  * ``quantize_activations_grouped`` (one per-row-range pass) == per-config
+    ``quantize_activations`` row-for-row;
+  * engine level: a fused ``ServeEngine`` emits bit-identical tokens to
+    ``fused_decode=False``, and the fused decode step's Pallas dispatch
+    count is CONSTANT in the number of tier groups (regression test for
+    the O(groups) -> O(1) dispatch claim).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import decompose
+from repro.core.policy import LayerPrecision, uniform_schedule
+from repro.kernels import ops, ref
+from repro.kernels import grouped_matmul as gmm
+from repro.kernels.act_quant import act_quant_rows
+from repro.kernels.bitserial_matmul import (bitserial_matmul,
+                                            packed_bitserial_matmul)
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve.engine import ServeEngine
+from repro.serve.request import Request
+
+TIERS = {"8/8": (8, 8), "6/6": (6, 8), "4/4": (4, 4), "2/2": (2, 2)}
+
+
+# ------------------------------------------------------------ kernel level
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("signed", [True, False])
+def test_grouped_matmul_vs_per_group(packed, signed):
+    """ONE group-switching dispatch == per-group kernel calls == oracle,
+    over a 4-group 8/6/4/2 layout."""
+    rng = np.random.default_rng(7)
+    m, k, n = 128, 128, 128
+    row_groups = ((32, 8), (32, 6), (32, 4), (32, 2))
+    lo, hi = decompose.weight_range(8, signed)
+    q8 = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int16)
+    planes = decompose.decompose_superplanes(jnp.asarray(q8),
+                                             signed=signed)  # MSB-first
+    x = rng.integers(-128, 128, size=(m, k)).astype(np.int8)
+
+    plane_groups = tuple((r, decompose.num_prefix_planes(b))
+                         for r, b in row_groups)
+    mult = jnp.asarray(decompose.prefix_multipliers(plane_groups))
+    pmax = max(p for _, p in plane_groups)
+
+    if packed:
+        wmat = ops.pack_planes(planes[::-1], 8)   # pack wants LSB-first
+        got = gmm.grouped_matmul(jnp.asarray(x), wmat, mult, nplanes=pmax,
+                                 packed=True, signed=signed, interpret=True)
+    else:
+        got = gmm.grouped_matmul(jnp.asarray(x), planes[:pmax], mult,
+                                 nplanes=pmax, signed=signed, interpret=True)
+
+    want = decompose.decomposed_matmul_grouped(jnp.asarray(x), planes,
+                                               row_groups)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    # ... and == the per-group single-tier kernels the fused path replaced.
+    off = 0
+    for rows, eff in row_groups:
+        xg = jnp.asarray(x[off:off + rows])
+        xg = jnp.concatenate([xg] * (128 // rows), axis=0)  # pad to bm tile
+        if packed:
+            per = packed_bitserial_matmul(xg, wmat, w_bits=8, eff_bits=eff,
+                                          signed=signed, interpret=True)
+        else:
+            per = bitserial_matmul(
+                xg, planes[:decompose.num_prefix_planes(eff)], w_bits=eff,
+                msb_first=True, interpret=True)
+        assert np.array_equal(np.asarray(per)[:rows],
+                              np.asarray(got)[off:off + rows]), (rows, eff)
+        off += rows
+
+
+def test_prefix_multipliers_exact():
+    """mult[r, c] = 4^(P'_r - 1 - c) inside the row's prefix, 0 beyond —
+    the compile-time table that gives each row block its shift chain."""
+    pg = ((2, 4), (1, 3), (2, 1))
+    mult = decompose.prefix_multipliers(pg)
+    assert mult.shape == (5, 4) and mult.dtype == np.int32
+    assert mult[0].tolist() == [64, 16, 4, 1]
+    assert mult[2].tolist() == [16, 4, 1, 0]
+    assert mult[3].tolist() == [1, 0, 0, 0]
+
+
+@pytest.mark.parametrize("backend", ["decomposed", "pallas"])
+@pytest.mark.parametrize("packed", [False, True])
+def test_ops_matmul_fused_vs_legacy(backend, packed):
+    """float-in/float-out: fused one-kernel path == per-group legacy loop,
+    bitwise, eager and jitted, with a non-trivial permutation."""
+    rng = np.random.default_rng(1)
+    k, n = 96, 80
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(6, k)).astype(np.float32))
+    qw = ops.prepare_superplane(jnp.asarray(w), packed=packed)
+    rg = tuple((r, LayerPrecision(b, a, backend=backend))
+               for r, b, a in ((2, 8, 8), (1, 6, 8), (2, 4, 4), (1, 2, 2)))
+    perm = jnp.asarray(np.array([3, 1, 4, 0, 5, 2], np.int32))
+
+    def run(fused):
+        return ops.matmul(x, None, rg[0][1], qw=qw, row_groups=rg,
+                          perm=perm, fused=fused)
+
+    y_legacy = np.asarray(run(False), np.float32)
+    assert np.array_equal(np.asarray(run(True), np.float32), y_legacy)
+    # auto-eligibility (fused=None) picks the fused path: same bits.
+    assert np.array_equal(np.asarray(run(None), np.float32), y_legacy)
+    # jitted == eager == each other (the engine always runs jitted).
+    jf = np.asarray(jax.jit(lambda: run(True))(), np.float32)
+    ju = np.asarray(jax.jit(lambda: run(False))(), np.float32)
+    assert np.array_equal(jf, ju) and np.array_equal(jf, y_legacy)
+
+
+def test_ops_matmul_fused_3d_decode_shape():
+    """[B, 1, K] decode shape through the fused path == legacy, bitwise."""
+    rng = np.random.default_rng(2)
+    x3 = jnp.asarray(rng.normal(size=(7, 1, 64)).astype(np.float32))
+    qw = ops.prepare_superplane(
+        jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32)))
+    rg = tuple((r, LayerPrecision(b, a, backend="decomposed"))
+               for r, b, a in ((3, 8, 8), (2, 4, 4), (2, 2, 2)))
+    perm = jnp.asarray(np.array([6, 0, 2, 4, 1, 3, 5], np.int32))
+    yf = ops.matmul(x3, None, rg[0][1], qw=qw, row_groups=rg, perm=perm,
+                    fused=True)
+    yr = ops.matmul(x3, None, rg[0][1], qw=qw, row_groups=rg, perm=perm,
+                    fused=False)
+    assert yf.shape == (7, 1, 48)
+    assert np.array_equal(np.asarray(yf, np.float32),
+                          np.asarray(yr, np.float32))
+
+
+def test_fused_requires_one_backend_and_signed():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 32)).astype(np.float32))
+    qw = ops.prepare_superplane(
+        jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32)))
+    perm = jnp.asarray(np.arange(2, dtype=np.int32))
+    mixed_be = ((1, LayerPrecision(8, 8, backend="decomposed")),
+                (1, LayerPrecision(4, 4, backend="pallas")))
+    with pytest.raises(ValueError, match="one integer backend"):
+        ops.matmul(x, None, mixed_be[0][1], qw=qw, row_groups=mixed_be,
+                   perm=perm, fused=True)
+    unsigned = ((1, LayerPrecision(8, 8, backend="decomposed")),
+                (1, LayerPrecision(4, 4, a_signed=False,
+                                   backend="decomposed")))
+    with pytest.raises(ValueError, match="signed activations"):
+        ops.matmul(x, None, unsigned[0][1], qw=qw, row_groups=unsigned,
+                   perm=perm, fused=True)
+    # ...and auto-eligibility (fused=None) silently falls back to legacy.
+    y = ops.matmul(x, None, unsigned[0][1], qw=qw, row_groups=unsigned,
+                   perm=perm)
+    assert y.shape == (2, 16)
+
+
+# --------------------------------------------------------- activation quant
+def test_quantize_activations_grouped_vs_per_config():
+    """One per-row-range pass == per-config quantization, row for row."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(6, 64)).astype(np.float32))
+    rg = tuple((r, LayerPrecision(b, a, backend="decomposed"))
+               for r, b, a in ((2, 8, 8), (1, 6, 8), (2, 4, 4), (1, 2, 2)))
+    perm = np.array([3, 1, 4, 0, 5, 2], np.int32)
+    qg, sg = ops.quantize_activations_grouped(x, rg, jnp.asarray(perm))
+    bits = [8, 8, 8, 4, 4, 2]     # per sorted row
+    for i in range(6):
+        qe, se = ops.quantize_activations(x, bits[i], signed=True)
+        assert np.array_equal(np.asarray(qg)[i], np.asarray(qe)[perm[i]]), i
+        assert np.array_equal(np.asarray(sg)[i], np.asarray(se)[perm[i]]), i
+
+
+def test_act_quant_rows_kernel_vs_ref():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    qmax = jnp.asarray(
+        rng.choice([1.0, 7.0, 31.0, 127.0], size=(128, 1)).astype(np.float32))
+    qk, sk = act_quant_rows(x, qmax, interpret=True)
+    qr, sr = ref.act_quant_rows_ref(x, qmax)
+    assert np.array_equal(np.asarray(qk), np.asarray(qr))
+    assert np.array_equal(np.asarray(sk), np.asarray(sr))
+
+
+def test_act_quant_scale_jit_stable():
+    """The quant scale must not depend on compilation context (the fused /
+    per-group bit-identity contract rests on it): jit == eager, bitwise."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    for bits in (2, 4, 6, 8):
+        qe, se = ops.quantize_activations(x, bits, signed=True)
+        qj, sj = jax.jit(
+            lambda v, b=bits: ops.quantize_activations(v, b, signed=True))(x)
+        assert np.array_equal(np.asarray(qe), np.asarray(qj)), bits
+        assert np.array_equal(np.asarray(se), np.asarray(sj)), bits
+
+
+# ------------------------------------------------------------- engine level
+KV_TIERS = {"8/8": None, "4/4": 8, "2/2": 4}
+ENGINE_TIERS = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+
+
+def _mk_engine(model, params, rt, **kw):
+    return ServeEngine(model, params, rt, max_batch=3, max_len=64,
+                       decode_chunk=3, **kw)
+
+
+def _requests(cfg, rng):
+    tiers = ["8/8", "4/4", "2/2", "2/2", "8/8", "4/4"]
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=3 + i % 4),
+                    max_new_tokens=b, tier=t)
+            for i, (t, b) in enumerate(zip(tiers, (7, 8, 6, 4, 2, 3)))]
+
+
+def test_engine_fused_token_identity_and_layout_cache():
+    """Fused decode == per-group decode, token for token; repeated slot-tier
+    vectors hit the layout cache; dispatch counts get recorded."""
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule(ENGINE_TIERS, kv_tiers=KV_TIERS)
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    rng = np.random.default_rng(11)
+    reqs = _requests(cfg, rng)
+
+    eng_f = _mk_engine(model, params, rt, count_dispatches=True)
+    got_f = eng_f.run(reqs)
+    eng_u = _mk_engine(model, eng_f.params, rt, fused_decode=False)
+    got_u = eng_u.run([Request(uid=r.uid, prompt=r.prompt,
+                               max_new_tokens=r.max_new_tokens, tier=r.tier)
+                       for r in reqs])
+    assert got_f == got_u
+
+    # Budgets span >1 chunk at the same occupancy: the second chunk's
+    # layout derivation must be a cache hit, not a re-sort.
+    assert eng_f.stats.layout_cache_hits > 0
+    assert eng_f.stats.layout_cache_misses >= 1
+    # count_dispatches=True records one jaxpr count per distinct layout
+    # (decomposed backend on CPU -> zero pallas_call equations).
+    assert len(eng_f.stats.decode_dispatches) >= 1
+    assert all(v == 0 for v in eng_f.stats.decode_dispatches.values())
+    assert eng_u.stats.decode_dispatches == {}
+
+
+def test_decode_dispatch_count_constant_in_groups():
+    """Regression: with the pallas backend, the fused decode step costs a
+    CONSTANT number of Pallas dispatches regardless of how many tier
+    groups share the batch; the per-group path scales linearly.  Counted
+    by tracing (jax.make_jaxpr) — nothing executes, so this runs on CPU."""
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule(ENGINE_TIERS, backend="pallas",
+                             kv_tiers=KV_TIERS)
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    eng_f = ServeEngine(model, params, rt, max_batch=4, max_len=64,
+                        decode_chunk=2)
+    eng_u = ServeEngine(model, eng_f.params, rt, max_batch=4, max_len=64,
+                        decode_chunk=2, fused_decode=False)
+    g2 = (("8/8", 2), ("4/4", 2))
+    g3 = (("8/8", 1), ("4/4", 2), ("2/2", 1))
+    n2f = eng_f.decode_dispatch_count(groups=g2)
+    n3f = eng_f.decode_dispatch_count(groups=g3)
+    n2u = eng_u.decode_dispatch_count(groups=g2)
+    n3u = eng_u.decode_dispatch_count(groups=g3)
+    assert n2f == n3f, (n2f, n3f)          # group-count independent
+    assert n2f < n2u and n3f < n3u         # and strictly fewer dispatches
+    assert n3u > n2u                       # per-group pays per group

@@ -111,24 +111,33 @@ def test_lower_precision_monotone_error():
     assert errs[0] > errs[1] > errs[2]
 
 
-@pytest.mark.parametrize("w_bits", [2, 4, 5, 8])
-def test_fused_dequant_matmul(w_bits):
-    """Fused epilogue kernel == (plane GEMM) * scales, within bf16 rounding."""
-    from repro.kernels.fused_matmul import fused_dequant_matmul
-    rng = np.random.default_rng(w_bits)
+@pytest.mark.parametrize("eff", [2, 4, 6, 8])
+def test_grouped_dequant_matmul_single_group(eff):
+    """Fused dequant epilogue == (prefix-plane GEMM) * scales, bf16 out.
+
+    Single-group degenerate case of the group-switching kernel (the mixed
+    layouts are swept in test_grouped_kernel.py): the epilogue must apply
+    x_scale [M,1] and per-row w_scale [M,N] exactly as the unfused
+    ``acc.astype(f32) * xs * ws`` association does."""
+    from repro.kernels import grouped_matmul as gmm
+    rng = np.random.default_rng(eff)
     m, k, n = 128, 256, 128
-    lo, hi = decompose.weight_range(w_bits, True)
-    w = rng.integers(lo, hi + 1, size=(k, n))
-    planes = decompose.decompose_weights(w, w_bits)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    qw = ops.prepare_superplane(jnp.asarray(w))
+    planes = qw.get_planes_msb()
+    nplanes = decompose.num_prefix_planes(eff)
+    plane_groups = ((m, nplanes),)
+    mult = jnp.asarray(decompose.prefix_multipliers(plane_groups))
     x = rng.integers(-128, 128, size=(m, k)).astype(np.int8)
     xs = (rng.random((m, 1)) * 0.1 + 0.01).astype(np.float32)
     ws = (rng.random((1, n)) * 0.1 + 0.01).astype(np.float32)
-    got = fused_dequant_matmul(jnp.asarray(x), planes, jnp.asarray(xs),
-                               jnp.asarray(ws), w_bits=w_bits, interpret=True)
-    want = (np.asarray(ref.bitserial_matmul_ref(jnp.asarray(x), planes,
-                                                w_bits)).astype(np.float64)
-            * xs * ws)
-    got64 = np.asarray(got, np.float64)
-    rel = np.abs(got64 - want).max() / max(np.abs(want).max(), 1e-9)
-    assert rel < 0.01  # bf16 output rounding only
+    ws_rows = jnp.broadcast_to(jnp.asarray(ws), (m, n))
+    got = gmm.grouped_dequant_matmul(
+        jnp.asarray(x), planes[:nplanes], mult, jnp.asarray(xs), ws_rows,
+        nplanes=nplanes, interpret=True)
+    acc = decompose.decomposed_matmul_grouped(jnp.asarray(x), planes,
+                                              ((m, eff),))
+    want = (np.asarray(acc).astype(np.float32) * xs * ws).astype(jnp.bfloat16)
     assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))

@@ -25,8 +25,14 @@ def _timeit(fn, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+# Rows accumulated for the --json artifact (BENCH_<pr>.json in CI).
+_RESULTS: list = []
+
+
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    _RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
 
 
 def bench_table2_csa_vs_bat():
@@ -584,6 +590,116 @@ def bench_autoprec_search():
          f"dominates_uniform8=True")
 
 
+def bench_serve_tp_scaling():
+    """Tensor-parallel sharded serving (``ServeEngine(mesh=...)``): one
+    mixed 8/4/2 request stream served at 1-, 2- and 4-device meshes.
+
+    Runs in a subprocess with 4 fake CPU devices (XLA_FLAGS).  Asserts
+    (acceptance criteria): every mesh width is TOKEN-IDENTICAL to the
+    unsharded engine, and the quantized wire moves <= 1/4 of the f32
+    baseline's bytes per gathered activation element at the 8-bit tier —
+    proportionally less at 4/2-bit, where codes travel bit-packed.
+    Reports tokens/s and analytic wire bytes per decode step per mesh."""
+    import json as _json
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    body = textwrap.dedent("""
+        import dataclasses, json, time
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.core.policy import uniform_schedule
+        from repro.distributed import tp_serve
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models.layers import Runtime
+        from repro.models.transformer import LM
+        from repro.serve import Request, ServeEngine
+
+        # num_kv_heads=4 so KV genuinely shards at n=2 and n=4 (the
+        # reduced GQA configs often collapse to MQA).
+        cfg = dataclasses.replace(reduced_config("granite-3-8b"),
+                                  num_kv_heads=4)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tiers = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+        sched = uniform_schedule(tiers, backend="decomposed",
+                                 kv_tiers={"8/8": None, "4/4": 8,
+                                           "2/2": 4})
+        rt = Runtime(policy=sched.policy_for(), mode="serve",
+                     moe_dropless=True, schedule=sched)
+        names = list(tiers)
+
+        def requests(base):
+            rng = np.random.default_rng(23)
+            return [Request(uid=base + i,
+                            prompt=rng.integers(0, cfg.vocab_size,
+                                                size=3 + i % 5),
+                            max_new_tokens=(8, 6, 7, 5, 8)[i],
+                            tier=names[i % 3]) for i in range(5)]
+
+        def serve(mesh):
+            eng = ServeEngine(model, params, rt, max_batch=4, max_len=64,
+                              decode_chunk=4, mesh=mesh)
+            eng.run(requests(0))        # compile warm-up, same layouts
+            t0 = time.perf_counter()
+            got = eng.run(requests(100))
+            dt = time.perf_counter() - t0
+            return got, dt, eng
+
+        ref, dt_ref, _ = serve(None)
+        toks = sum(len(v) for v in ref.values())
+        # A representative full-occupancy mixed layout for the analytic
+        # wire cost: 2 slots at 8/8, one each at 4/4 and 2/2.
+        layout = ((2, 8), (1, 4), (1, 2))
+        out = {"tokens": toks, "meshes": {}}
+        for n in (1, 2, 4):
+            got, dt, eng = serve(make_serve_mesh(n))
+            assert got == ref, f"mesh {n} diverged from unsharded tokens"
+            tp = eng._tp
+            assert tp is not None and tp.n == n
+            assert n == 1 or tp.kv_shards
+            stats = tp_serve.decode_wire_stats(cfg, tp, layout)
+            for rows, bits in layout:   # the bit-serial wire law
+                bpe = tp_serve.wire_bytes_per_element(bits)
+                assert bpe <= 4.0 / 4.0 * (bits / 8.0 if bits < 8
+                                           else 1.0), (bits, bpe)
+            assert stats["vs_f32"] == 0 or stats["vs_f32"] >= 4.0
+            out["meshes"][n] = {
+                "tokens_per_s": toks / dt,
+                "wire_bytes_per_step": stats["quant_gather_bytes"],
+                "out_bytes_per_step": stats["out_gather_bytes"],
+                "bytes_per_element": stats["bytes_per_element"],
+                "vs_f32": stats["vs_f32"],
+                "kv_shards": tp.kv_shards,
+            }
+        out["tokens_per_s_unsharded"] = toks / dt_ref
+        print("TP_SCALING_JSON " + json.dumps(out))
+    """)
+    t0 = time.perf_counter()
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    us = (time.perf_counter() - t0) * 1e6
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    line = next(l for l in r.stdout.splitlines()
+                if l.startswith("TP_SCALING_JSON "))
+    res = _json.loads(line.split(" ", 1)[1])
+    per_mesh = " ".join(
+        f"n{n}:{m['tokens_per_s']:.1f}tok/s:"
+        f"{m['wire_bytes_per_step']:.0f}B/step"
+        for n, m in sorted(res["meshes"].items(), key=lambda kv: int(kv[0])))
+    bpe = res["meshes"]["2"]["bytes_per_element"]
+    vs = res["meshes"]["2"]["vs_f32"]
+    _row("serve_tp_scaling", us,
+         f"tokens/s unsharded={res['tokens_per_s_unsharded']:.1f} "
+         + per_mesh + f" wire_bytes/elem@n2={bpe:.3f} vs_f32={vs:.1f}x "
+         "(8-bit rows 4x, 4-bit 8x, 2-bit 16x) token_identical=True")
+
+
 def bench_dryrun_roofline_summary():
     """Summarize the multi-pod dry-run roofline table if results exist."""
     res_dir = os.path.join(os.path.dirname(os.path.dirname(
@@ -621,6 +737,7 @@ BENCHES = {
     "serve_mixed_tiers": bench_serve_mixed_tiers,
     "fused_decode": bench_fused_decode,
     "serve_slo_scheduling": bench_serve_slo_scheduling,
+    "serve_tp_scaling": bench_serve_tp_scaling,
     "autoprec_search": bench_autoprec_search,
     "dryrun_roofline": bench_dryrun_roofline_summary,
 }
@@ -635,6 +752,10 @@ def main(argv=None) -> None:
                     help="run only these rows (CI smoke)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate available rows (name: summary) and exit")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR7.json",
+                    default=None, metavar="PATH",
+                    help="also persist the rows as a JSON artifact "
+                         "(default path: BENCH_PR7.json)")
     args = ap.parse_args(argv)
     if args.list:
         for name in sorted(BENCHES):
@@ -645,6 +766,11 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"rows": _RESULTS}, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json} ({len(_RESULTS)} rows)")
 
 
 if __name__ == "__main__":

@@ -13,16 +13,17 @@ collective term for DP-dominated meshes; an optional 2-bit plane mode reuses
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import decompose
+from repro.kernels import ref
 
 
-def compressed_psum(g, err, *, axis_name: str, bits: int = 8):
+def compressed_psum(g: jax.Array, err: jax.Array, *, axis_name: str,
+                    bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Quantized psum of one tensor with error feedback.
 
     g, err: local f32 tensors (same shape).  Returns (mean_grad, new_err).
@@ -33,9 +34,13 @@ def compressed_psum(g, err, *, axis_name: str, bits: int = 8):
     amax_local = jnp.max(jnp.abs(corrected))
     amax = jax.lax.pmax(amax_local, axis_name)         # scalar collective
     qmax = 127 if bits == 8 else 1
-    scale = jnp.maximum(amax, 1e-12) / qmax
+    # Shared reciprocal-multiply scale rule (kernels/ref.quant_scale): the
+    # bare `/ qmax` here drifted 1 ulp between eager and jit (XLA
+    # strength-reduction), which desynchronizes the globally-agreed scale.
+    scale = ref.quant_scale(amax, qmax, eps=1e-12)
     q = jnp.clip(jnp.round(corrected / scale), -qmax - 1, qmax)
     new_err = corrected - q * scale                    # error feedback
+    total: jax.Array
     if bits == 8:
         total = jax.lax.psum(q.astype(jnp.int32), axis_name)
     else:
@@ -43,14 +48,17 @@ def compressed_psum(g, err, *, axis_name: str, bits: int = 8):
         planes = decompose.decompose_weights(q.astype(jnp.int32), 2,
                                              signed=True)
         total = jax.lax.psum(planes[0].astype(jnp.int32), axis_name)
-    return total.astype(jnp.float32) * scale / n_dev, new_err
+    mean: jax.Array = total.astype(jnp.float32) * scale / n_dev
+    return mean, new_err
 
 
-def compressed_psum_tree(grads, err_tree, *, axis_name: str, bits: int = 8):
+def compressed_psum_tree(grads: Any, err_tree: Any, *, axis_name: str,
+                         bits: int = 8) -> Tuple[Any, Any]:
     """Tree version; returns (mean_grads, new_err_tree)."""
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(err_tree)
-    out_g, out_e = [], []
+    out_g: List[jax.Array] = []
+    out_e: List[jax.Array] = []
     for g, e in zip(flat_g, flat_e):
         mg, ne = compressed_psum(g.astype(jnp.float32), e,
                                  axis_name=axis_name, bits=bits)
@@ -60,5 +68,5 @@ def compressed_psum_tree(grads, err_tree, *, axis_name: str, bits: int = 8):
             jax.tree.unflatten(treedef, out_e))
 
 
-def init_error_feedback(params):
+def init_error_feedback(params: Any) -> Any:
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

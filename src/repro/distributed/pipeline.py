@@ -7,8 +7,7 @@ against sequential execution in tests (on fake CPU devices).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +15,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.sharding import shard_map
 
+StageFn = Callable[[Any, jax.Array], jax.Array]
 
-def gpipe(stage_fn: Callable, *, axis_name: str = "stage"):
+
+def gpipe(stage_fn: StageFn, *, axis_name: str = "stage") -> StageFn:
     """Build a pipelined forward for ``y = stage_{S-1}(... stage_0(x))``.
 
     stage_fn(stage_params, x) -> y must be shape-preserving ([mb, ...] -> same),
@@ -30,7 +31,7 @@ def gpipe(stage_fn: Callable, *, axis_name: str = "stage"):
     the last stage (replicated back by the caller if needed).
     """
 
-    def pipe(stage_params, x_micro):
+    def pipe(stage_params: Any, x_micro: jax.Array) -> jax.Array:
         n_stages = jax.lax.psum(1, axis_name)
         stage = jax.lax.axis_index(axis_name)
         n_micro = x_micro.shape[0]
@@ -40,7 +41,8 @@ def gpipe(stage_fn: Callable, *, axis_name: str = "stage"):
         buf = jnp.zeros_like(x_micro)                   # collected outputs
         carry = jnp.zeros_like(x_micro[0])              # inbound activation
 
-        def tick(t, state):
+        def tick(t: Any, state: Tuple[jax.Array, jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
             carry, buf = state
             # Stage 0 injects microbatch t (when still available).
             mb_idx = jnp.clip(t, 0, n_micro - 1)
@@ -58,29 +60,33 @@ def gpipe(stage_fn: Callable, *, axis_name: str = "stage"):
             carry = jax.lax.ppermute(y, axis_name, perm)
             return carry, buf
 
-        _, buf = jax.lax.fori_loop(0, total, tick, (carry, buf))
-        return buf
+        state = jax.lax.fori_loop(0, total, tick, (carry, buf))
+        out: jax.Array = state[1]
+        return out
 
     return pipe
 
 
-def run_pipeline(mesh: Mesh, stage_fn: Callable, stage_params, x_micro,
-                 axis_name: str = "stage"):
+def run_pipeline(mesh: Mesh, stage_fn: StageFn, stage_params: Any,
+                 x_micro: jax.Array,
+                 axis_name: str = "stage") -> jax.Array:
     """Convenience wrapper: shard_map the gpipe over ``axis_name``.
 
     stage_params: pytree with leading stage dim; x_micro: [n_micro, mb, ...].
     Returns the last stage's outputs, gathered to all devices."""
     pipe = gpipe(stage_fn, axis_name=axis_name)
 
-    def shmapped(sp, xm):
+    def shmapped(sp: Any, xm: jax.Array) -> jax.Array:
         out = pipe(jax.tree.map(lambda a: a[0], sp), xm)
         # Broadcast the final stage's buffer to every stage.
         n_stages = jax.lax.psum(1, axis_name)
         stage = jax.lax.axis_index(axis_name)
         mask = (stage == n_stages - 1).astype(out.dtype)
-        return jax.lax.psum(out * mask, axis_name)
+        summed: jax.Array = jax.lax.psum(out * mask, axis_name)
+        return summed
 
     f = shard_map(shmapped, mesh=mesh,
-                      in_specs=(P(axis_name), P()), out_specs=P(),
-                      check_vma=False)
-    return f(stage_params, x_micro)
+                  in_specs=(P(axis_name), P()), out_specs=P(),
+                  check_vma=False)
+    y: jax.Array = f(stage_params, x_micro)
+    return y

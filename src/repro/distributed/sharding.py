@@ -14,7 +14,7 @@ on CPU tests.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Union
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -24,21 +24,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # check_vma in the move.  Resolve both once here so every shard_map user
 # (tp_matmul, pipeline, tests) works on both sides of the move; callers
 # use the new-style ``check_vma`` spelling.
+_shard_map: Callable[..., Any]
 try:
     from jax.experimental.shard_map import shard_map as _shard_map
 except ImportError:  # newer jax removed the experimental alias
     _shard_map = jax.shard_map
 
 
-def shard_map(f, *args, check_vma: Optional[bool] = None, **kwargs):
+def shard_map(f: Callable[..., Any], *args: Any,
+              check_vma: Optional[bool] = None,
+              **kwargs: Any) -> Callable[..., Any]:
     import inspect
     if check_vma is not None:
         params = inspect.signature(_shard_map).parameters
         kwargs["check_vma" if "check_vma" in params else "check_rep"] = \
             check_vma
-    return _shard_map(f, *args, **kwargs)
+    wrapped: Callable[..., Any] = _shard_map(f, *args, **kwargs)
+    return wrapped
 
 Axis = Union[str, Sequence[str], None]
+# A logical axis resolved against a concrete mesh.
+Resolved = Union[str, tuple[str, ...], None]
 
 # Logical name -> preferred mesh axes (first match present in mesh wins; for
 # "batch" every present axis is used jointly).
@@ -57,11 +63,12 @@ def current_mesh() -> Optional[Mesh]:
     import warnings
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        m: Mesh = getattr(jax.interpreters.pxla,
+                          "thread_resources").env.physical_mesh
     return None if m.empty else m
 
 
-def resolve_axis(mesh: Mesh, logical: Axis):
+def resolve_axis(mesh: Mesh, logical: Axis) -> Resolved:
     """Logical axis name -> mesh axis (or tuple) present in this mesh."""
     if logical is None:
         return None
@@ -86,7 +93,8 @@ def named_sharding(mesh: Mesh, *logical_axes: Axis) -> NamedSharding:
     return NamedSharding(mesh, make_spec(mesh, *logical_axes))
 
 
-def shard(x, *logical_axes: Axis, divisible_only: bool = True):
+def shard(x: jax.Array, *logical_axes: Axis,
+          divisible_only: bool = True) -> jax.Array:
     """with_sharding_constraint by logical axis names; no-op without a mesh.
 
     If a dimension does not divide the resolved mesh axes the annotation is
@@ -94,18 +102,19 @@ def shard(x, *logical_axes: Axis, divisible_only: bool = True):
     mesh = current_mesh()
     if mesh is None:
         return x
-    resolved = []
+    resolved: list[Resolved] = []
     for dim, logical in zip(x.shape, logical_axes):
         axis = resolve_axis(mesh, logical)
         if axis is not None and divisible_only:
             n = 1
             for a in (axis if isinstance(axis, tuple) else (axis,)):
-                n *= mesh.shape[a]
+                n *= int(mesh.shape[a])
             if dim % n != 0:
                 axis = None
         resolved.append(axis)
-    return jax.lax.with_sharding_constraint(
+    out: jax.Array = jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*resolved)))
+    return out
 
 
 def mesh_divides(mesh: Optional[Mesh], dim: int, logical: Axis) -> bool:
@@ -116,5 +125,5 @@ def mesh_divides(mesh: Optional[Mesh], dim: int, logical: Axis) -> bool:
         return False
     n = 1
     for a in (axis if isinstance(axis, tuple) else (axis,)):
-        n *= mesh.shape[a]
+        n *= int(mesh.shape[a])
     return dim % n == 0

@@ -7,7 +7,7 @@ vectors.  Rules match on parameter path suffixes produced by
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -15,9 +15,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shlib
 
+# Trailing-dim logical spec: logical axis name (or None) per dim.
+_Logical = Tuple[Optional[str], ...]
+
 # (suffix substring, logical spec for the trailing dims).  First match wins.
 # Stacked leading period dims are padded with None automatically.
-_RULES: tuple[tuple[str, tuple], ...] = (
+_RULES: Tuple[Tuple[str, _Logical], ...] = (
     # MoE expert banks [E, d, f] / [E, f, d]: EP on E (checked divisible),
     # FSDP on the middle dim.
     ("['moe']['gate_proj']['w']", ("expert", "fsdp", None)),
@@ -40,15 +43,15 @@ _RULES: tuple[tuple[str, tuple], ...] = (
     ("['lm_head']['w']", ("fsdp", "model")),
 )
 
-_MOE_TP_FALLBACK = {
+_MOE_TP_FALLBACK: Dict[str, _Logical] = {
     "['moe']['gate_proj']['w']": (None, "fsdp", "model"),
     "['moe']['up_proj']['w']": (None, "fsdp", "model"),
     "['moe']['down_proj']['w']": (None, "model", "fsdp"),
 }
 
 
-def param_spec(mesh: Mesh, path: str, leaf) -> P:
-    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+def param_spec(mesh: Mesh, path: str, leaf: Any) -> P:
+    ndim = int(np.ndim(leaf)) if not hasattr(leaf, "ndim") else int(leaf.ndim)
     is_planes = path.endswith(".planes")   # QuantizedWeight planes [..,P,K,N]
     for suffix, logical in _RULES:
         if suffix in path:
@@ -62,7 +65,7 @@ def param_spec(mesh: Mesh, path: str, leaf) -> P:
                 # Keep E on the expert dim; plane dim P replicated.
                 logical = (logical[0], None) + tuple(logical[1:])
             lead = ndim - len(logical)
-            axes = (None,) * lead + tuple(
+            axes: Tuple[shlib.Resolved, ...] = (None,) * lead + tuple(
                 shlib.resolve_axis(mesh, a) for a in logical)
             # Drop annotations that do not divide.
             axes = tuple(
@@ -73,18 +76,18 @@ def param_spec(mesh: Mesh, path: str, leaf) -> P:
     return P()  # vectors / norms / biases: replicated
 
 
-def _axis_size(mesh: Mesh, axis) -> int:
+def _axis_size(mesh: Mesh, axis: shlib.Resolved) -> int:
     if axis is None:
         return 1
     if isinstance(axis, tuple):
         n = 1
         for a in axis:
-            n *= mesh.shape[a]
+            n *= int(mesh.shape[a])
         return n
-    return mesh.shape[axis]
+    return int(mesh.shape[axis])
 
 
-def tree_shardings(mesh: Mesh, tree: Any):
+def tree_shardings(mesh: Mesh, tree: Any) -> Any:
     """NamedSharding pytree for params / optimizer state / caches."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -94,7 +97,7 @@ def tree_shardings(mesh: Mesh, tree: Any):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def batch_spec(mesh: Mesh, shape) -> P:
+def batch_spec(mesh: Mesh, shape: Sequence[int]) -> P:
     """Batch sharded over (pod, data) when divisible; else replicated
     (e.g. long-context global_batch=1)."""
     ndim = len(shape)
@@ -104,25 +107,25 @@ def batch_spec(mesh: Mesh, shape) -> P:
     return P(batch_axes, *([None] * (ndim - 1)))
 
 
-def batch_shardings(mesh: Mesh, batch: Any):
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
     return jax.tree.map(
         lambda x: NamedSharding(mesh, batch_spec(mesh, np.shape(x))), batch)
 
 
-def cache_spec(mesh: Mesh, path: str, leaf) -> P:
+def cache_spec(mesh: Mesh, path: str, leaf: Any) -> P:
     """KV/SSM caches: batch axis sharded (dim 1 after the stacked period
     dim 0); KV / SSM heads sharded over model when divisible; long-context
     KV falls back to sequence sharding (SP) when the batch does not divide."""
-    ndim = leaf.ndim
+    ndim = int(leaf.ndim)
     if ndim < 4:
         return P()
     batch_axes = shlib.resolve_axis(mesh, "batch")
     model = shlib.resolve_axis(mesh, "model")
-    axes = [None] * ndim
+    axes: List[shlib.Resolved] = [None] * ndim
     if batch_axes is not None and leaf.shape[1] % _axis_size(mesh, batch_axes) == 0:
         axes[1] = batch_axes
 
-    def try_axis(dim, ax):
+    def try_axis(dim: int, ax: shlib.Resolved) -> None:
         if ax is not None and leaf.shape[dim] % _axis_size(mesh, ax) == 0:
             axes[dim] = ax
 
@@ -149,10 +152,84 @@ def cache_spec(mesh: Mesh, path: str, leaf) -> P:
     return P(*axes)
 
 
-def cache_shardings(mesh: Mesh, cache_tree: Any):
+def cache_shardings(mesh: Mesh, cache_tree: Any) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
     out = []
     for kp, leaf in flat:
         path = jax.tree_util.keystr(kp)
         out.append(NamedSharding(mesh, cache_spec(mesh, path, leaf)))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------- serve TP
+# ServeEngine(mesh=) layout — distinct from the training _RULES above: for
+# bitwise token identity EVERY sharded projection is N-sharded on its LAST
+# weight axis (an N-shard never splits a K-reduction; o/down get their full
+# K via the quantized code gather — see distributed/tp_serve.py), and
+# everything else (embed, norms, lm_head, MoE, SSM) is replicated.
+_SERVE_TP_SHARDED = (
+    "['attn']['q_proj']", "['attn']['o_proj']",
+    "['mlp']['gate_proj']", "['mlp']['up_proj']", "['mlp']['down_proj']",
+)
+_SERVE_TP_KV = ("['attn']['k_proj']", "['attn']['v_proj']")
+
+
+def serve_tp_param_spec(path: str, leaf: Any, *, n: int, kv_shards: bool,
+                        axis: str = "model") -> P:
+    """Spec for one prepared (QuantizedWeight) param leaf under serve TP.
+
+    Shards the last axis of ``planes``/``packed``/``scale`` leaves of the
+    TP projections (k/v only when ``kv_shards``); raises if a sharded axis
+    does not divide — serve TP is exact-or-error, never silently partial
+    (unlike the training rules above, which drop non-dividing axes)."""
+    if not path.endswith((".planes", ".packed", ".scale")):
+        return P()
+    names = _SERVE_TP_SHARDED + (_SERVE_TP_KV if kv_shards else ())
+    if not any(s in path for s in names):
+        return P()
+    if leaf.shape[-1] % n != 0:
+        raise ValueError(
+            f"serve TP: {path} last axis {leaf.shape[-1]} does not divide "
+            f"across {n} devices")
+    return P(*([None] * (leaf.ndim - 1)), axis)
+
+
+def serve_tp_cache_spec(path: str, leaf: Any, *, n: int, kv_shards: bool,
+                        axis: str = "model") -> P:
+    """Spec for one stacked arena cache leaf ([periods, B, S, KVH, ...]):
+    k/v stores and their scales shard over KV heads when ``kv_shards``;
+    lengths, tier codes and SSM state stay replicated."""
+    leafname = path.rsplit(".", 1)[-1] if "." in path else path
+    if (kv_shards and leaf.ndim >= 5
+            and leafname in ("k", "v", "k_scale", "v_scale")):
+        if leaf.shape[3] % n != 0:
+            raise ValueError(
+                f"serve TP: {path} KV-head axis {leaf.shape[3]} does not "
+                f"divide across {n} devices")
+        axes: List[Optional[str]] = [None] * int(leaf.ndim)
+        axes[3] = axis
+        return P(*axes)
+    return P()
+
+
+def _serve_tp_specs(tree: Any, spec_fn: Callable[..., P], *, n: int,
+                    kv_shards: bool, axis: str = "model") -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [spec_fn(jax.tree_util.keystr(kp), leaf, n=n,
+                   kv_shards=kv_shards, axis=axis) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def serve_tp_param_specs(tree: Any, *, n: int, kv_shards: bool,
+                         axis: str = "model") -> Any:
+    """PartitionSpec pytree (same structure as ``tree``) for the prepared
+    superplane store under serve TP."""
+    return _serve_tp_specs(tree, serve_tp_param_spec, n=n,
+                           kv_shards=kv_shards, axis=axis)
+
+
+def serve_tp_cache_specs(tree: Any, *, n: int, kv_shards: bool,
+                         axis: str = "model") -> Any:
+    """PartitionSpec pytree for the stacked slot-arena caches."""
+    return _serve_tp_specs(tree, serve_tp_cache_spec, n=n,
+                           kv_shards=kv_shards, axis=axis)

@@ -19,23 +19,32 @@ same decomposition idea pointed at the TP axis.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.sharding import shard_map
+from repro.kernels import ops
 
 
-def _quantize_rows(x, qmax=127.0):
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+def _quantize_rows(x: jax.Array,
+                   bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Wire quantizer == compute quantizer.
+
+    Routes through the shared kernels/act_quant implementation
+    (``ops.quantize_activations`` — Pallas kernel on TPU, bit-identical
+    jnp oracle elsewhere) so the wire format and the compute format cannot
+    drift, and inherits the reciprocal-multiply scale (``ref.quant_scale``)
+    whose bits are stable across eager/jit."""
+    q, scale = ops.quantize_activations(x.astype(jnp.float32), a_bits=bits,
+                                        signed=True)
+    return q, scale.astype(jnp.bfloat16)
 
 
-def column_parallel_quantized(x_sp, w_ncol, *, axis_name: str):
+def column_parallel_quantized(x_sp: jax.Array, w_ncol: jax.Array, *,
+                              axis_name: str) -> jax.Array:
     """INSIDE shard_map: y_n = full(x) @ W_ncol with an int8 gather.
 
     x_sp:   [..., K/n]  sequence/hidden-sharded activations (SP form).
@@ -44,10 +53,11 @@ def column_parallel_quantized(x_sp, w_ncol, *, axis_name: str):
     """
     q, scale = _quantize_rows(x_sp)
     # Gather int8 shards; tiled=True concatenates along the axis -> [..., K].
-    q_all = jax.lax.all_gather(q, axis_name, axis=q.ndim - 1, tiled=True)
-    s_all = jax.lax.all_gather(scale, axis_name, axis=scale.ndim - 1,
-                               tiled=True)                  # [..., n]
-    n = jax.lax.psum(1, axis_name)
+    q_all: jax.Array = jax.lax.all_gather(q, axis_name, axis=q.ndim - 1,
+                                          tiled=True)
+    s_all: jax.Array = jax.lax.all_gather(scale, axis_name,
+                                          axis=scale.ndim - 1,
+                                          tiled=True)       # [..., n]
     k_shard = x_sp.shape[-1]
     # Per-source-shard dequantization: expand scales across their K/n block.
     s_full = jnp.repeat(s_all, k_shard, axis=-1)            # [..., K]
@@ -55,7 +65,8 @@ def column_parallel_quantized(x_sp, w_ncol, *, axis_name: str):
     return jnp.matmul(x_full, w_ncol.astype(jnp.bfloat16))
 
 
-def row_parallel_scatter(x_n, w_krow, *, axis_name: str):
+def row_parallel_scatter(x_n: jax.Array, w_krow: jax.Array, *,
+                         axis_name: str) -> jax.Array:
     """INSIDE shard_map: y_sp = psum_scatter(x_n @ W_krow) in bf16.
 
     x_n:    [..., N/n]  column-sharded activations (this device's slice).
@@ -64,27 +75,32 @@ def row_parallel_scatter(x_n, w_krow, *, axis_name: str):
     """
     partial = jnp.matmul(x_n.astype(jnp.bfloat16),
                          w_krow.astype(jnp.bfloat16))       # [..., K]
-    return jax.lax.psum_scatter(partial, axis_name,
-                                scatter_dimension=partial.ndim - 1,
-                                tiled=True)
+    out: jax.Array = jax.lax.psum_scatter(partial, axis_name,
+                                          scatter_dimension=partial.ndim - 1,
+                                          tiled=True)
+    return out
 
 
-def tp_mlp_block(mesh: Mesh, x, w_up, w_down, *, axis_name: str = "model",
-                 activation: Callable = jax.nn.gelu):
+def tp_mlp_block(mesh: Mesh, x: jax.Array, w_up: jax.Array,
+                 w_down: jax.Array, *, axis_name: str = "model",
+                 activation: Callable[[jax.Array], jax.Array]
+                 = jax.nn.gelu) -> jax.Array:
     """y = act(x @ w_up) @ w_down with quantized manual-TP collectives.
 
     x: [..., D] replicated on `axis_name`; w_up: [D, F]; w_down: [F, D].
     Returns [..., D] replicated (for comparison against the reference)."""
-    n = mesh.shape[axis_name]
+    n = int(mesh.shape[axis_name])
     d, f = w_up.shape
     assert d % n == 0 and f % n == 0
 
-    def body(x_sp, w_up_loc, w_down_loc):
+    def body(x_sp: jax.Array, w_up_loc: jax.Array,
+             w_down_loc: jax.Array) -> jax.Array:
         h = column_parallel_quantized(x_sp, w_up_loc, axis_name=axis_name)
         h = activation(h.astype(jnp.float32)).astype(jnp.bfloat16)
         y_sp = row_parallel_scatter(h, w_down_loc, axis_name=axis_name)
-        return jax.lax.all_gather(y_sp, axis_name, axis=y_sp.ndim - 1,
-                                  tiled=True)
+        y: jax.Array = jax.lax.all_gather(y_sp, axis_name,
+                                          axis=y_sp.ndim - 1, tiled=True)
+        return y
 
     lead = tuple([None] * (x.ndim - 1))
     fm = shard_map(
@@ -94,10 +110,12 @@ def tp_mlp_block(mesh: Mesh, x, w_up, w_down, *, axis_name: str = "model",
                   P(axis_name, None)),       # w_down: K-sharded
         out_specs=P(),
         check_vma=False)
-    return fm(x, w_up, w_down)
+    out: jax.Array = fm(x, w_up, w_down)
+    return out
 
 
-def collective_bytes_per_token(d: int, f: int, n_shards: int) -> dict:
+def collective_bytes_per_token(d: int, f: int,
+                               n_shards: int) -> Dict[str, float]:
     """Napkin math for §Perf: wire bytes per token for one MLP block."""
     gather_int8 = d * 1 + (d // (d // n_shards)) * 2        # codes + scales
     gather_f32 = d * 4                                      # GSPMD on CPU

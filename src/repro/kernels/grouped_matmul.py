@@ -31,6 +31,13 @@ Both weight layouts ride the same grid:
 additionally applies the per-row activation scale and per-row weight scale in
 the flush step (the fused-dequant epilogue), so the accumulator never
 leaves VMEM unscaled.
+
+shard_map compatibility (distributed/tp_serve): every operand is either
+replicated (the per-row multiplier table, activation codes after the
+quantized all-gather) or sharded on a non-contracting dim (weight planes /
+packed bytes / scales on N), so the kernel body needs no collectives and a
+device's local call computes an exact N-shard of the unsharded result —
+the grid never splits a K-reduction across devices.
 """
 from __future__ import annotations
 

@@ -424,6 +424,8 @@ def quantize_activations_grouped(
 def fused_decode_linear(x: jax.Array, qw: QuantizedWeight,
                         row_groups: RowGroups, perm: Optional[jax.Array], *,
                         act_quants: Optional[ActQuants] = None,
+                        pre_quant: Optional[Tuple[jax.Array,
+                                                  jax.Array]] = None,
                         out_dtype: Any = None,
                         interpret: Optional[bool] = None,
                         bm: int = 128, bn: int = 128,
@@ -437,6 +439,11 @@ def fused_decode_linear(x: jax.Array, qw: QuantizedWeight,
          both scales (``grouped_dequant_matmul``) — the accumulator never
          leaves VMEM unscaled.
 
+    ``pre_quant`` supplies already-quantized PERMUTED ``(codes, scales)``
+    and skips step 1 — the tensor-parallel path quantizes once with a
+    mesh-shared range and all-gathers the codes, then lands here so shards
+    reuse this exact GEMM + dequant epilogue.
+
     Returns results in PERMUTED (group-sorted) order, like
     ``matmul(row_groups=)``; bit-identical to the per-group path: integer
     plane combination is exact, and the f32 dequant applies the same values
@@ -447,8 +454,11 @@ def fused_decode_linear(x: jax.Array, qw: QuantizedWeight,
         raise ValueError("fused grouped matmul needs one integer backend "
                          f"across groups, got {backends}")
     backend = backends[0]
-    x_q, x_s = quantize_activations_grouped(x, row_groups, perm,
-                                            act_quants=act_quants)
+    if pre_quant is not None:
+        x_q, x_s = pre_quant
+    else:
+        x_q, x_s = quantize_activations_grouped(x, row_groups, perm,
+                                                act_quants=act_quants)
     k, n = qw.kn
     lead = x_q.shape[:-1]
     reps = 1
@@ -640,6 +650,17 @@ def _dequant_gemm(x_q: jax.Array, x_s: jax.Array, qw: QuantizedWeight,
         raise ValueError(f"unknown backend {backend!r}")
     w_s = qw.eff_scale(eff_bits) if eff_bits != qw.w_bits else qw.scale
     return (acc.astype(jnp.float32) * x_s * w_s).astype(out_dtype)
+
+
+def dequant_matmul(x_q: jax.Array, x_s: jax.Array, qw: QuantizedWeight,
+                   prec: LayerPrecision, out_dtype: Any) -> jax.Array:
+    """Public pre-quantized entry to the plane-prefix GEMM + dequant.
+
+    Identical to the tail of :func:`_integer_matmul` — the tensor-parallel
+    path calls this after quantizing with a mesh-shared range and gathering
+    codes across shards, so sharded and unsharded decode run the very same
+    GEMM/dequant graph per row."""
+    return _dequant_gemm(x_q, x_s, qw, prec, out_dtype)
 
 
 def count_pallas_calls(jaxpr: Any) -> int:

@@ -28,6 +28,21 @@ def packed_bitserial_matmul_ref(x_int: jax.Array, w_packed: jax.Array,
     return jnp.asarray(decompose.decomposed_matmul(x_int, w_packed, w_bits))
 
 
+def quant_scale(amax: jax.Array, qmax: jax.Array | float,
+                eps: float = 1e-8) -> jax.Array:
+    """THE symmetric-quant scale rule: ``max(amax, eps) * (1/qmax)`` in f32.
+
+    Reciprocal-multiply, not ``/ qmax``: XLA strength-reduces division by a
+    constant under jit but not eagerly (nor for traced per-row ranges in
+    :func:`act_quant_rows_ref`) — writing ``* (1/qmax)`` pins all paths to
+    one bit pattern.  Mirrors kernels/act_quant.py.  Every scale in the repo
+    that must agree bitwise between eager/jit or across devices (activation
+    quant, the distributed wire format, compressed gradient psum) routes
+    through this one expression."""
+    return jnp.maximum(amax, eps) * (
+        jnp.float32(1.0) / jnp.asarray(qmax, jnp.float32))
+
+
 def act_quant_ref(x: jax.Array, bits: int = 8,
                   signed: bool = True) -> tuple[jax.Array, jax.Array]:
     """Per-row symmetric activation quantization oracle.
@@ -36,11 +51,7 @@ def act_quant_ref(x: jax.Array, bits: int = 8,
     qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
     qmin = -(1 << (bits - 1)) if signed else 0
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    # Reciprocal-multiply, not `/ qmax`: XLA strength-reduces division by a
-    # constant under jit but not eagerly (nor for traced per-row ranges in
-    # act_quant_rows_ref) — writing `* (1/qmax)` pins all paths to one bit
-    # pattern.  Mirrors kernels/act_quant.py.
-    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / jnp.float32(qmax))
+    scale = quant_scale(amax, qmax)
     dtype = jnp.int8 if signed else jnp.uint8   # unsigned 8-bit needs uint8
     q = jnp.clip(jnp.round(x / scale), qmin, qmax).astype(dtype)
     return q, scale.astype(jnp.float32)
@@ -53,7 +64,7 @@ def act_quant_rows_ref(x: jax.Array,
     :func:`act_quant_ref` at that row's width (same f32 divisor, exact max
     reduction).  Returns (q int8 [M,K], scale f32 [M,1])."""
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) * (jnp.float32(1.0) / qmax)
+    scale = quant_scale(amax, qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 

@@ -18,3 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / PP experiments (e.g. (4,), ('stage',))."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_serve_mesh(n: int):
+    """1D ("model",) mesh over the first ``n`` devices for tensor-parallel
+    serving (``ServeEngine(mesh=...)`` / ``repro.launch.serve --mesh N``).
+
+    Unlike :func:`make_mesh` this slices ``jax.devices()`` explicitly, so a
+    host with more devices than requested still builds an n-way mesh (the
+    CI/dev pattern: 4 fake CPU devices, meshes of 1/2/4)."""
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"--mesh {n} needs {n} devices but only {len(devs)} visible; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before importing jax")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape((n,)), ("model",))

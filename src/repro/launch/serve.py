@@ -98,6 +98,14 @@ def main(argv=None):
                          "tokens the first live request is migrated to the "
                          "last --tiers entry (requantizes its KV lane in "
                          "place; needs --tiers, mixed admission)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="tensor-parallel serving over N devices: shard the "
+                         "superplane store column-wise and the KV arena over "
+                         "heads, with quantized (int8 / bit-packed) "
+                         "activation gathers on the wire — token-identical "
+                         "to the unsharded engine.  On CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for fake "
+                         "devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -172,6 +180,19 @@ def main(argv=None):
     if args.auto_tier and (schedule is None or args.serialize_tiers):
         ap.error("--auto-tier needs runtime tiers with mixed admission "
                  "(--tiers/--schedule-file, no --serialize-tiers)")
+    mesh = None
+    if args.mesh:
+        if args.baseline:
+            ap.error("--mesh needs the continuous-batching engine; drop "
+                     "--baseline")
+        if args.backend == "dense":
+            ap.error("--mesh shards the quantized plane store; it needs an "
+                     "integer backend (decomposed/pallas)")
+        from repro.launch.mesh import make_serve_mesh
+        try:
+            mesh = make_serve_mesh(args.mesh)   # fail fast, pre model build
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = LM(cfg)
@@ -207,7 +228,14 @@ def main(argv=None):
                              max_len=args.max_len, kv_bits=args.kv_bits,
                              decode_chunk=args.decode_chunk,
                              mixed_tiers=not args.serialize_tiers,
-                             scheduler_policy=scheduler_policy)
+                             scheduler_policy=scheduler_policy,
+                             mesh=mesh)
+        if mesh is not None:
+            tp = engine._tp
+            assert tp is not None
+            print(f"mesh: {tp.n}-way tensor parallel "
+                  f"(kv_shards={tp.kv_shards}) over "
+                  f"{[d.platform for d in mesh.devices.flat]}")
 
     rng = np.random.default_rng(args.seed)
     tier_of = (lambda i: args.tiers[i % len(args.tiers)]) if args.tiers \

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import LayerPrecision, PrecisionPolicy, PrecisionSchedule
+from repro.distributed import tp_serve
 from repro.distributed.sharding import shard
 from repro.kernels import ops
 
@@ -56,6 +57,11 @@ class Runtime:
     perm: Optional[Any] = None          # TRACED int32 [B]: tier-sorted order
     inv_perm: Optional[Any] = None      # TRACED int32 [B]: inverse of perm
     fused: bool = True                  # one-kernel mixed-tier grouped GEMMs
+    # Tensor-parallel context (a static tp_serve.TPConfig), set only INSIDE
+    # the engine's shard_map body: params arrive as this device's shards,
+    # attention sees local head counts, and o/down projections take the
+    # quantized-gather path.  None (default) = the unsharded graph.
+    tp: Optional[Any] = None
 
     def prec(self, name: str) -> LayerPrecision:
         if self.schedule is not None:
@@ -130,12 +136,20 @@ def linear(params, x, rt: Runtime, name: str, *,
                     "require the slot-batch axis to lead")
             if len(rt.groups) == 1:       # homogeneous layout: no permuting
                 tier = rt.groups[0][0]
-                return ops.matmul(
-                    x, None, _serve_backend(rt.schedule.lookup(name, tier)),
-                    qw=w)
+                prec = _serve_backend(rt.schedule.lookup(name, tier))
+                if rt.tp is not None and rt.tp.gathers(name):
+                    return tp_serve.gathered_matmul(x, w, prec, tp=rt.tp)
+                return ops.matmul(x, None, prec, qw=w)
             row_groups = tuple(
                 (n, _serve_backend(rt.schedule.lookup(name, t)))
                 for t, n in rt.groups)
+            if rt.tp is not None and rt.tp.gathers(name):
+                # Feature-sharded input: quantize with the pmax-shared
+                # range, gather codes per group at its wire width, run the
+                # unchanged group-switching GEMM on the local N-shard.
+                yg = tp_serve.gathered_grouped_matmul(x, w, row_groups,
+                                                      rt.perm, tp=rt.tp)
+                return jnp.take(yg, rt.inv_perm, axis=0)
             # The permutation is applied INSIDE ops.matmul (to the already-
             # quantized codes/scales, keeping scales bitwise stable); the
             # grouped result comes back in sorted order and is scattered
@@ -145,7 +159,10 @@ def linear(params, x, rt: Runtime, name: str, *,
                             fused=None if rt.fused else False,
                             act_quants=act_quants)
             return jnp.take(yg, rt.inv_perm, axis=0)
-        return ops.matmul(x, None, _serve_backend(rt.prec(name)), qw=w)
+        prec = _serve_backend(rt.prec(name))
+        if rt.tp is not None and rt.tp.gathers(name):
+            return tp_serve.gathered_matmul(x, w, prec, tp=rt.tp)
+        return ops.matmul(x, None, prec, qw=w)
     y = ops.matmul(x, w, rt.prec(name))
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
@@ -641,6 +658,16 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
     scratch.  Returns (out, new_cache)."""
     b, s, d = x.shape
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if rt.tp is not None:
+        # Inside shard_map the q (and, when the KV heads divide, k/v)
+        # projections are head-sharded: local head counts drive every
+        # reshape, and GQA grouping is re-derived from the LOCAL ratio —
+        # exact because a contiguous query-head slice maps onto the
+        # matching KV-head slice (kv_shards) or onto the one replicated
+        # MQA head (num_kv_heads == 1 fallback).
+        h //= rt.tp.n
+        if rt.tp.kv_shards:
+            kvh //= rt.tp.n
     if positions is None:
         if cache_start is not None:
             base = jnp.asarray(cache_start, jnp.int32).reshape(-1, 1)

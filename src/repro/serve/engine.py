@@ -70,8 +70,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import numpy.typing as npt
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.policy import PrecisionPolicy
+from repro.distributed import sharding_rules, tp_serve
+from repro.distributed.sharding import shard_map
 from repro.kernels import ops
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
@@ -328,7 +331,8 @@ class ServeEngine(_DeferredErrors):
                  mixed_tiers: bool = True,
                  fused_decode: bool = True,
                  count_dispatches: bool = False,
-                 scheduler_policy: Optional[SchedulerPolicy] = None) -> None:
+                 scheduler_policy: Optional[SchedulerPolicy] = None,
+                 mesh: Optional[Any] = None) -> None:
         self.model = model
         # ``fused_decode`` selects the mixed-tier grouped-matmul
         # implementation: one group-switching kernel (default) vs the
@@ -368,6 +372,17 @@ class ServeEngine(_DeferredErrors):
             self._mixed_kv = True
         self.arena = slots_lib.SlotArena(model, max_batch, max_len,
                                          kv_bits=arena_kv)
+        # Tensor-parallel serving (mesh=): shard the superplane store N-wise
+        # and the KV arena over heads, validate divisibility, and place both
+        # trees before any dispatch.  The jitted prefill/decode/migrate
+        # functions below are then wrapped in shard_map with the quantized
+        # collectives from distributed/tp_serve — token-identical to the
+        # unsharded engine (the TP grouped path always runs the fused GEMM,
+        # so ``fused_decode`` only affects the unsharded reference).
+        self.mesh = mesh
+        self._tp: Optional[tp_serve.TPConfig] = None
+        if mesh is not None:
+            self._tp = self._init_mesh_placement(mesh)
         self.scheduler = Scheduler(max_batch, policy=scheduler_policy)
         self.stats = EngineStats()
         # Group-layout memo: slot-tier vector -> (groups, perm).  Recurring
@@ -386,13 +401,18 @@ class ServeEngine(_DeferredErrors):
 
         def prefill_slot(params: Any, caches: Any, slot: Any, tokens: Any,
                          length: Any, kv_code: Any,
-                         tier: Optional[str] = None) -> Tuple[Any, Any]:
+                         tier: Optional[str] = None,
+                         tp: Optional[tp_serve.TPConfig] = None
+                         ) -> Tuple[Any, Any]:
             """Admit one request: reset slot, prefill its prompt (right-
             padded to a bucket), write the batch-1 cache back into the
             arena.  ``tier`` is STATIC (retraces only per prompt bucket x
             tier); ``slot``, ``tokens``, ``length`` and ``kv_code`` (the
-            slot's KV tier, 16/8/4) are traced."""
+            slot's KV tier, 16/8/4) are traced.  ``tp`` (static) is set
+            only when called inside the mesh wrapper's shard_map body."""
             rt_eff = self.rt.for_tier(tier)
+            if tp is not None:
+                rt_eff = dataclasses.replace(rt_eff, tp=tp)
             sub = slots_lib.slot_view(caches, slot)
             sub = jax.tree.map(jnp.zeros_like, sub)     # per-slot reset
             if mixed_kv:
@@ -407,7 +427,8 @@ class ServeEngine(_DeferredErrors):
         def decode_chunk_fn(params: Any, caches: Any, tok: Any,
                             remaining: Any, perm: Any, n_steps: int,
                             tier: Optional[str] = None,
-                            groups: Optional[GroupLayout] = None) -> Any:
+                            groups: Optional[GroupLayout] = None,
+                            tp: Optional[tp_serve.TPConfig] = None) -> Any:
             """The single jitted inner loop: ``n_steps`` decode steps as one
             lax.scan with an active mask.  A slot's budget hitting zero
             freezes its cache (masked writes) THAT step; its lane still
@@ -424,6 +445,8 @@ class ServeEngine(_DeferredErrors):
                 rt_eff = self.rt.for_groups(groups, perm)
             else:
                 rt_eff = self.rt.for_tier(tier)
+            if tp is not None:
+                rt_eff = dataclasses.replace(rt_eff, tp=tp)
 
             def step(carry: Any, _: Any) -> Any:
                 tok, caches, remaining = carry
@@ -440,18 +463,153 @@ class ServeEngine(_DeferredErrors):
                 step, (tok, caches, remaining), None, length=n_steps)
             return caches, tok, remaining, toks, actives
 
-        self._prefill_slot = jax.jit(prefill_slot,
-                                     static_argnames=("tier",))
         # Un-jitted handle kept for trace-only introspection
         # (decode_dispatch_count): jax.make_jaxpr stages the step without
-        # running it.
+        # running it.  NOTE: it traces the UNSHARDED graph (tp=None) even
+        # on a mesh engine — dispatch counts are a per-device property of
+        # the kernels, not of the collectives around them.
         self._decode_chunk_fn = decode_chunk_fn
-        self._decode_chunk = jax.jit(decode_chunk_fn,
-                                     static_argnames=("n_steps", "tier",
-                                                      "groups"))
-        # Mid-stream KV migration: one jitted requantize serves every
-        # (slot, from-tier, to-tier) combination — slot and code are traced.
-        self._migrate_kv = jax.jit(slots_lib.migrate_kv_tier)
+        if self.mesh is None:
+            self._prefill_slot = jax.jit(prefill_slot,
+                                         static_argnames=("tier",))
+            self._decode_chunk = jax.jit(decode_chunk_fn,
+                                         static_argnames=("n_steps", "tier",
+                                                          "groups"))
+            # Mid-stream KV migration: one jitted requantize serves every
+            # (slot, from-tier, to-tier) combination — slot and code are
+            # traced.
+            self._migrate_kv = jax.jit(slots_lib.migrate_kv_tier)
+        else:
+            (self._prefill_slot, self._decode_chunk,
+             self._migrate_kv) = self._mesh_wrap(prefill_slot,
+                                                 decode_chunk_fn)
+
+    # --------------------------------------------------------------- mesh TP
+    def _init_mesh_placement(self, mesh: Any) -> tp_serve.TPConfig:
+        """Validate the mesh against the model, derive the static TP
+        context, and place the prepared store + slot arena.
+
+        Every sharded weight is N-sharded on its last axis; the KV arena
+        shards over KV heads when they divide, else (MQA ``num_kv_heads ==
+        1``) stays replicated with only query heads sharded.  Divisibility
+        is exact-or-error: a non-dividing axis raises here, at
+        construction, not mid-stream."""
+        if "model" not in mesh.axis_names:
+            raise ValueError("serve TP needs a mesh with a 'model' axis, "
+                             f"got axes {mesh.axis_names}")
+        n = int(mesh.shape["model"])
+        cfg = self.model.cfg
+        if cfg.num_heads and cfg.num_heads % n != 0:
+            raise ValueError(
+                f"serve TP: num_heads={cfg.num_heads} does not divide "
+                f"across {n} devices")
+        kv_shards = bool(cfg.num_kv_heads) and cfg.num_kv_heads % n == 0
+        if cfg.num_kv_heads and not kv_shards and cfg.num_kv_heads != 1:
+            raise ValueError(
+                f"serve TP: num_kv_heads={cfg.num_kv_heads} neither "
+                f"divides across {n} devices nor is 1 (the replicated-MQA "
+                "fallback)")
+        tp = tp_serve.TPConfig(n=n, kv_shards=kv_shards)
+
+        def flat_specs(tree: Any, spec_fn: Any) -> Tuple[Any, Any]:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            specs = tuple(
+                spec_fn(jax.tree_util.keystr(kp), leaf, n=n,
+                        kv_shards=kv_shards) for kp, leaf in flat)
+            return specs, treedef
+
+        self._p_specs, self._p_def = flat_specs(
+            self.params, sharding_rules.serve_tp_param_spec)
+        self._c_specs, self._c_def = flat_specs(
+            self.arena.caches, sharding_rules.serve_tp_cache_spec)
+
+        def place(tree: Any, specs: Any, treedef: Any) -> Any:
+            shardings = jax.tree_util.tree_unflatten(
+                treedef, [NamedSharding(mesh, s) for s in specs])
+            return jax.device_put(tree, shardings)
+
+        self.params = place(self.params, self._p_specs, self._p_def)
+        self.arena.caches = place(self.arena.caches, self._c_specs,
+                                  self._c_def)
+        return tp
+
+    def _mesh_wrap(self, prefill_slot: Any,
+                   decode_chunk_fn: Any) -> Tuple[Any, Any, Any]:
+        """Build the jitted shard_map twins of prefill/decode/migrate.
+
+        The wrappers keep the EXACT call signatures ``step()`` /
+        ``_admit_free_slots()`` / ``_set_tier()`` use, so the scheduling
+        loop is mesh-oblivious: params/caches are flattened to leaf tuples
+        (shard_map specs ride the flat tuples — no spec-filled dataclass
+        containers), the body re-builds the trees and runs the same inner
+        functions with ``tp`` set, and cache shards come back still
+        sharded (out_specs = in_specs) so the arena never materializes
+        unsharded."""
+        mesh, tp = self.mesh, self._tp
+        p_specs, p_def = self._p_specs, self._p_def
+        c_specs, c_def = self._c_specs, self._c_def
+        unflatten = jax.tree_util.tree_unflatten
+        rep = P()
+
+        def sharded_prefill(params: Any, caches: Any, slot: Any,
+                            tokens: Any, length: Any, kv_code: Any,
+                            tier: Optional[str] = None) -> Tuple[Any, Any]:
+            fp = tuple(jax.tree.leaves(params))
+            fc = tuple(jax.tree.leaves(caches))
+
+            def body(fp: Any, fc: Any, slot: Any, tokens: Any, length: Any,
+                     kv_code: Any) -> Tuple[Any, Any]:
+                tok, out_c = prefill_slot(
+                    unflatten(p_def, fp), unflatten(c_def, fc), slot,
+                    tokens, length, kv_code, tier=tier, tp=tp)
+                return tok, tuple(jax.tree.leaves(out_c))
+
+            tok, fc2 = shard_map(
+                body, mesh=mesh,
+                in_specs=(p_specs, c_specs, rep, rep, rep, rep),
+                out_specs=(rep, c_specs), check_vma=False)(
+                    fp, fc, slot, tokens, length, kv_code)
+            return tok, unflatten(c_def, fc2)
+
+        def sharded_decode(params: Any, caches: Any, tok: Any,
+                           remaining: Any, perm: Any, n_steps: int,
+                           tier: Optional[str] = None,
+                           groups: Optional[GroupLayout] = None) -> Any:
+            fp = tuple(jax.tree.leaves(params))
+            fc = tuple(jax.tree.leaves(caches))
+
+            def body(fp: Any, fc: Any, tok: Any, remaining: Any,
+                     perm: Any) -> Any:
+                out_c, tok2, rem2, toks, act = decode_chunk_fn(
+                    unflatten(p_def, fp), unflatten(c_def, fc), tok,
+                    remaining, perm, n_steps, tier, groups, tp=tp)
+                return (tuple(jax.tree.leaves(out_c)), tok2, rem2, toks,
+                        act)
+
+            fc2, tok2, rem2, toks, act = shard_map(
+                body, mesh=mesh,
+                in_specs=(p_specs, c_specs, rep, rep, rep),
+                out_specs=(c_specs, rep, rep, rep, rep),
+                check_vma=False)(fp, fc, tok, remaining, perm)
+            return unflatten(c_def, fc2), tok2, rem2, toks, act
+
+        def sharded_migrate(caches: Any, slot: Any, code: Any) -> Any:
+            fc = tuple(jax.tree.leaves(caches))
+
+            def body(fc: Any, slot: Any, code: Any) -> Any:
+                out = slots_lib.migrate_kv_tier(unflatten(c_def, fc), slot,
+                                                code)
+                return tuple(jax.tree.leaves(out))
+
+            fc2 = shard_map(body, mesh=mesh, in_specs=(c_specs, rep, rep),
+                            out_specs=c_specs, check_vma=False)(
+                                fc, slot, code)
+            return unflatten(c_def, fc2)
+
+        return (jax.jit(sharded_prefill, static_argnames=("tier",)),
+                jax.jit(sharded_decode,
+                        static_argnames=("n_steps", "tier", "groups")),
+                jax.jit(sharded_migrate))
 
     # ----------------------------------------------------- dispatch counting
     def decode_dispatch_count(self, *, groups: Optional[GroupLayout] = None,

@@ -37,10 +37,12 @@ def test_docs_exist_and_are_linked_from_readme():
     assert os.path.isfile(os.path.join(REPO, "docs", "architecture.md"))
     assert os.path.isfile(os.path.join(REPO, "docs", "serving.md"))
     assert os.path.isfile(os.path.join(REPO, "docs", "autoprec.md"))
+    assert os.path.isfile(os.path.join(REPO, "docs", "distributed.md"))
     readme = open(os.path.join(REPO, "README.md")).read()
     assert "docs/architecture.md" in readme, "README must link the docs"
     assert "docs/serving.md" in readme, "README must link the docs"
     assert "docs/autoprec.md" in readme, "README must link the docs"
+    assert "docs/distributed.md" in readme, "README must link the docs"
 
 
 @pytest.mark.parametrize("doc", _doc_ids())

@@ -69,6 +69,56 @@ def test_collectives_are_quantized():
     assert "WIRE_OK" in out
 
 
+def test_wire_quantizer_scale_jit_stable():
+    """Regression (mirrors test_act_quant_scale_jit_stable): the wire
+    quantizer's scale must be bitwise identical between eager and jit.
+    The original `amax / qmax` true division drifted 1 ulp under XLA
+    strength-reduction, desynchronizing the wire format from the compute
+    format; both now route through ref.quant_scale's reciprocal
+    multiply."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.distributed.tp_matmul import _quantize_rows
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    qe, se = _quantize_rows(x)
+    qj, sj = jax.jit(_quantize_rows)(x)
+    assert np.array_equal(np.asarray(qe), np.asarray(qj))
+    assert np.array_equal(np.asarray(se, np.float32),
+                          np.asarray(sj, np.float32))
+
+
+def test_compressed_psum_scale_jit_stable():
+    """Same regression for the DP gradient compressor: the globally-agreed
+    scale (pmax'd amax * reciprocal) must not depend on compilation
+    context, or replicas disagree on the wire format."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed.compression import compressed_psum
+    from repro.distributed.sharding import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape((1,)), ("dp",))
+    rng = np.random.default_rng(8)
+    g = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    err = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32) * 1e-3)
+
+    def body(g, e):
+        return compressed_psum(g, e, axis_name="dp")
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                   out_specs=(P(), P()), check_vma=False)
+    me, ee = fn(g, err)
+    mj, ej = jax.jit(fn)(g, err)
+    # The wire-visible quantities (shared scale, integer sum -> mean grad)
+    # must be BITWISE stable; the error-feedback residual is device-local
+    # and may differ by an FMA contraction under jit, which EF absorbs.
+    assert np.array_equal(np.asarray(me), np.asarray(mj))
+    np.testing.assert_allclose(np.asarray(ee), np.asarray(ej), atol=1e-6)
+
+
 def test_napkin_math():
     from repro.distributed.tp_matmul import collective_bytes_per_token
     est = collective_bytes_per_token(4096, 12288, 16)

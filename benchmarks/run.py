@@ -530,6 +530,98 @@ def bench_serve_slo_scheduling():
          "token_identical=True preps_after_construction=0")
 
 
+def bench_serve_overload():
+    """Overload survival at 4x: FIFO vs SLO vs SLO+preemption on a bursty
+    two-tenant trace.
+
+    Eight long best-effort "bulk" requests burst in at t=0 — four times
+    the slot count — and pin both slots for the whole horizon; three
+    short, deadline-tight "gold" 2/2 requests trickle in behind them.  No
+    slot frees before the gold deadlines, so admission-order policies
+    cannot save them: FIFO serves the backlog in order (gold waits out
+    the ENTIRE bulk queue), plain SLO reorders the queue but still has to
+    wait for a free slot, and only SLO+preemption displaces a running
+    bulk request (snapshotting its KV lane for a later prefill-free
+    resume) to run gold immediately.  Asserts (acceptance criteria):
+    token-identity across all three policies — in particular every
+    preempted-and-resumed bulk request is bit-identical to its
+    uninterrupted runs under FIFO/SLO — zero deadline misses for
+    deadline-bearing requests under SLO+preemption, and strictly lower
+    p99 queue-wait for them than under either FIFO or plain SLO."""
+    from repro.configs import reduced_config
+    from repro.core.policy import uniform_schedule
+    from repro.models.layers import Runtime
+    from repro.models.transformer import LM
+    from repro.serve import Request, ServeEngine, SLOPolicy
+
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    rng = np.random.default_rng(23)
+    params = model.init(jax.random.PRNGKey(0))
+    tiers = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+    sched = uniform_schedule(tiers, backend="decomposed")
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+
+    def req(uid, budget, tier, deadline, tenant):
+        return Request(uid=uid,
+                       prompt=rng.integers(0, cfg.vocab_size, size=4 + uid),
+                       max_new_tokens=budget, tier=tier, deadline=deadline,
+                       tenant=tenant)
+
+    # 4x overload: 8 best-effort requests burst onto 2 slots at t=0; the
+    # urgent gold tail arrives once both slots are already pinned for a
+    # full 24-tick wave, so no slot frees before the gold deadlines and
+    # only displacement can serve them in time.
+    arrivals = [(0.0, req(i, 24, t, None, "bulk"))
+                for i, t in enumerate(["8/8", "4/4"] * 4)]
+    arrivals += [(2.0, req(8, 2, "2/2", 14.0, "gold")),
+                 (4.0, req(9, 2, "2/2", 14.0, "gold")),
+                 (6.0, req(10, 2, "2/2", 16.0, "gold"))]
+
+    store = {}
+
+    def serve(policy):
+        eng = ServeEngine(model, store.get("params", params), rt,
+                          max_batch=2, max_len=64, decode_chunk=4,
+                          scheduler_policy=policy)
+        store["params"] = eng.params          # share the superplane store
+        pending = list(arrivals)
+        t0 = time.perf_counter()
+        while pending or eng.has_work:
+            while pending and (pending[0][0] <= eng.clock
+                               or not eng.has_work):
+                eng.submit(pending.pop(0)[1])
+            eng.step()
+        dt = time.perf_counter() - t0
+        urgent = [h for h in eng.handles.values()
+                  if h.request.deadline is not None]
+        waits = np.array([h.queue_wait for h in urgent])
+        misses = sum(1 for h in urgent
+                     if h.finished_at > h.submitted_at + h.request.deadline)
+        return eng.results, waits, misses, eng.stats, dt
+
+    got_f, waits_f, miss_f, _, dt_f = serve(None)               # FIFO
+    got_s, waits_s, miss_s, _, dt_s = serve(SLOPolicy(sched))   # plain SLO
+    got_p, waits_p, miss_p, st_p, dt_p = serve(
+        SLOPolicy(sched, preempt=True, preempt_slack=8.0))
+    assert got_s == got_f and got_p == got_f, \
+        "a preempted-and-resumed stream diverged from its uninterrupted run"
+    assert st_p.preemptions > 0 and st_p.resumes == st_p.preemptions
+    p99_f, p99_s, p99_p = (float(np.percentile(w, 99))
+                           for w in (waits_f, waits_s, waits_p))
+    assert miss_p == 0, f"preemption still missed {miss_p} gold deadlines"
+    assert p99_p < p99_s < p99_f, (p99_p, p99_s, p99_f)
+    toks = sum(len(v) for v in got_f.values())
+    _row("serve_overload", (dt_f + dt_s + dt_p) * 1e6 / (3 * len(arrivals)),
+         f"gold_p99_queue_wait fifo={p99_f:.0f} slo={p99_s:.0f} "
+         f"slo+preempt={p99_p:.0f} (decode-step ticks) "
+         f"deadline_misses fifo={miss_f} slo={miss_s} slo+preempt={miss_p} "
+         f"preemptions={st_p.preemptions} resumes={st_p.resumes} "
+         f"tokens/s fifo={toks/dt_f:.1f} preempt={toks/dt_p:.1f} "
+         "token_identical=True")
+
+
 def bench_autoprec_search():
     """Hardware-aware automatic mixed-precision search (repro.autoprec):
     Pareto front of avg bits vs modeled cycles vs measured divergence.
@@ -737,6 +829,7 @@ BENCHES = {
     "serve_mixed_tiers": bench_serve_mixed_tiers,
     "fused_decode": bench_fused_decode,
     "serve_slo_scheduling": bench_serve_slo_scheduling,
+    "serve_overload": bench_serve_overload,
     "serve_tp_scaling": bench_serve_tp_scaling,
     "autoprec_search": bench_autoprec_search,
     "dryrun_roofline": bench_dryrun_roofline_summary,
@@ -752,10 +845,10 @@ def main(argv=None) -> None:
                     help="run only these rows (CI smoke)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate available rows (name: summary) and exit")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR7.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_PR8.json",
                     default=None, metavar="PATH",
                     help="also persist the rows as a JSON artifact "
-                         "(default path: BENCH_PR7.json)")
+                         "(default path: BENCH_PR8.json)")
     args = ap.parse_args(argv)
     if args.list:
         for name in sorted(BENCHES):

@@ -8,37 +8,49 @@ Elasticity: leaves are saved as *global* (unsharded) arrays; restore places
 them onto any target sharding, so the mesh may change between runs.  At real
 1000-node scale the same layout shards per-host (each host saves its addressable
 slice; the manifest records the offsets) — single-process here, global arrays.
+
+Beyond train-loop checkpoints, the serving engine spills preempted-slot
+snapshots through this module (``ServeEngine(spill_dir=...)``): one step dir
+per suspended request, written by an ``AsyncCheckpointer(keep=0)`` (GC off —
+live spills must never be collected) and deleted via :func:`remove` as each
+request resumes.
 """
 from __future__ import annotations
 
-import dataclasses
+import dataclasses  # noqa: F401  (re-exported convenience for callers)
 import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+import numpy.typing as npt
 
 
-def _flatten(tree):
+def _flatten(tree: Any) -> Tuple[List[Any], List[str], Any]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     paths = [jax.tree_util.keystr(kp) for kp, _ in
              jax.tree_util.tree_flatten_with_path(tree)[0]]
     return leaves, paths, treedef
 
 
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
 def save(directory: str, step: int, tree: Any,
          extra: Optional[Dict[str, Any]] = None) -> str:
     """Synchronous atomic save.  Returns the final checkpoint path."""
     leaves, paths, _ = _flatten(tree)
-    final = os.path.join(directory, f"step_{step:08d}")
+    final = _step_dir(directory, step)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    manifest: Dict[str, Any] = {"step": step, "leaves": [],
+                                "extra": extra or {}}
     for i, (leaf, path) in enumerate(zip(leaves, paths)):
         arr = np.asarray(jax.device_get(leaf))
         orig_dtype = str(arr.dtype)
@@ -61,23 +73,28 @@ def save(directory: str, step: int, tree: Any,
 
 class AsyncCheckpointer:
     """Snapshot on the caller thread (device_get), write on a worker thread —
-    training continues while the previous checkpoint hits disk."""
+    training continues while the previous checkpoint hits disk.
 
-    def __init__(self, directory: str, keep: int = 3):
+    ``keep=0`` disables retention GC entirely (every step dir stays until
+    explicitly :func:`remove`'d) — the mode the serving engine's preemption
+    spills rely on."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
 
-    def wait(self):
+    def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def save(self, step: int, tree: Any, extra=None):
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
         self.wait()
         snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
-        def work():
+        def work() -> None:
             save(self.directory, step, snapshot, extra)
             gc_old(self.directory, keep=self.keep)
 
@@ -85,7 +102,7 @@ class AsyncCheckpointer:
         self._thread.start()
 
 
-def list_steps(directory: str):
+def list_steps(directory: str) -> List[int]:
     if not os.path.isdir(directory):
         return []
     steps = []
@@ -101,19 +118,30 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def gc_old(directory: str, keep: int = 3):
+def gc_old(directory: str, keep: int = 3) -> None:
     steps = list_steps(directory)
     for s in steps[:-keep] if keep else []:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+
+
+def remove(directory: str, step: int) -> None:
+    """Delete one step dir (and any stale .tmp twin).  Idempotent — a
+    missing step is not an error, so resume/cancel cleanup paths need no
+    existence dance."""
+    shutil.rmtree(_step_dir(directory, step), ignore_errors=True)
+    shutil.rmtree(_step_dir(directory, step) + ".tmp", ignore_errors=True)
 
 
 def restore(directory: str, step: int, target: Any,
-            sharding_fn: Optional[Callable[[str, np.ndarray], Any]] = None):
+            sharding_fn: Optional[
+                Callable[[str, npt.NDArray[Any]], Any]] = None
+            ) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of ``target`` (values replaced).
 
-    sharding_fn(path, array) -> jax.sharding.Sharding | None lets the caller
-    re-shard elastically onto the *current* mesh."""
-    path = os.path.join(directory, f"step_{step:08d}")
+    ``target`` only contributes leaf shapes/dtypes — ``jax.eval_shape``
+    skeletons work.  sharding_fn(path, array) -> jax.sharding.Sharding |
+    None lets the caller re-shard elastically onto the *current* mesh."""
+    path = _step_dir(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves, paths, treedef = _flatten(target)

@@ -229,6 +229,19 @@ def relative_tier_costs(schedule: Any,
     return {name: c / floor for name, c in raw.items()}
 
 
+def fastest_tier(schedule: Any,
+                 mac_counts: Optional[Mapping[str, float]] = None) -> str:
+    """Name of the schedule's cheapest (fastest per-token) tier under
+    :func:`relative_tier_costs` — ties break lexicographically so the
+    answer is deterministic across runs.
+
+    This is the overload-control floor: a deadline request that does not
+    fit capacity even at this tier cannot be saved by downtiering, so
+    ``SLOPolicy(shed=True)`` sheds it outright."""
+    costs = relative_tier_costs(schedule, mac_counts)
+    return min(sorted(costs), key=lambda t: costs[t])
+
+
 # Published comparison rows (Table III), scaled-to-28nm values as printed.
 TABLE3_OTHERS = {
     "TVLSI22_bitparallel": {"peak_tops": 4.12, "eff_8bit": 3.62,

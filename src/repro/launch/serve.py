@@ -31,6 +31,16 @@ plane prefix switched at the next group layout):
         --tiers 8/8 4/4 2/2 --slo --requests 9
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --tiers 8/8 4/4 2/2 --kv-tiers bf16 8 4 --migrate-demo --requests 6
+
+Overload survival on top of --slo: ``--preempt`` lets a deadlined request
+that ran out of slack displace the slackest running slot (the victim's
+KV/SSM slice is snapshotted host-side and later resumes prefill-free,
+token-identical); ``--shed`` turns admission into overload control — a
+deadline request whose projected completion exceeds modeled capacity is
+refused at submit (terminal SHED status) instead of missing late:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 2/2 --slo --preempt --shed --requests 12
 """
 from __future__ import annotations
 
@@ -88,6 +98,20 @@ def main(argv=None):
                     help="SLO-aware admission (SLOPolicy): every 3rd "
                          "request gets a tight deadline; reports per-"
                          "request queue waits and deadline misses")
+    ap.add_argument("--preempt", action="store_true",
+                    help="with --slo: slot preemption — a deadlined "
+                         "waiting request out of slack displaces the "
+                         "slackest running slot (snapshot + prefill-free, "
+                         "token-identical resume)")
+    ap.add_argument("--shed", action="store_true",
+                    help="with --slo: admission control — shed a deadline "
+                         "request at submit when its projected completion "
+                         "exceeds modeled capacity (with --auto-tier it is "
+                         "downtiered first if a faster tier still fits)")
+    ap.add_argument("--spill-dir", default=None, metavar="DIR",
+                    help="spill preempted-slot snapshots through the "
+                         "checkpoint subsystem (atomic step dirs under DIR) "
+                         "instead of holding them host-resident")
     ap.add_argument("--auto-tier", action="store_true",
                     help="with --slo on a tiered engine: deadline-aware "
                          "tier auto-selection — a deadlined request is "
@@ -174,6 +198,12 @@ def main(argv=None):
                      "--serialize-tiers / --baseline)")
     if args.slo and args.baseline:
         ap.error("--slo has no effect on the batch-at-a-time baseline")
+    if (args.preempt or args.shed) and not args.slo:
+        ap.error("--preempt/--shed are SLOPolicy overload hooks; they need "
+                 "--slo")
+    if args.spill_dir and not args.preempt:
+        ap.error("--spill-dir only stores preempted-slot snapshots; it "
+                 "needs --preempt")
     if args.auto_tier and not args.slo:
         ap.error("--auto-tier needs --slo (it is SLOPolicy's admission "
                  "hook)")
@@ -222,14 +252,19 @@ def main(argv=None):
         # tier's per-layer widths are MAC-weighted.
         scheduler_policy = SLOPolicy(
             schedule, auto_tier=args.auto_tier,
-            mac_counts=cfg.quant_layer_macs() if schedule else None) \
+            mac_counts=cfg.quant_layer_macs() if schedule else None,
+            preempt=args.preempt,
+            # Chunk granularity: a queued request can wait up to ~2 chunks
+            # before the displacement check sees it again.
+            preempt_slack=2.0 * args.decode_chunk,
+            shed=args.shed) \
             if args.slo else None
         engine = ServeEngine(model, params, rt, max_batch=args.max_batch,
                              max_len=args.max_len, kv_bits=args.kv_bits,
                              decode_chunk=args.decode_chunk,
                              mixed_tiers=not args.serialize_tiers,
                              scheduler_policy=scheduler_policy,
-                             mesh=mesh)
+                             mesh=mesh, spill_dir=args.spill_dir)
         if mesh is not None:
             tp = engine._tp
             assert tp is not None
@@ -241,23 +276,53 @@ def main(argv=None):
     tier_of = (lambda i: args.tiers[i % len(args.tiers)]) if args.tiers \
         else (lambda i: None)
     # --slo: a deadline-skewed stream — every 3rd request is urgent (a
-    # tight budget in scheduler-clock ticks); the rest are patient.
-    deadline_of = (lambda i: 4.0 * args.max_new if i % 3 == 2
-                   else 50.0 * args.max_new) if args.slo else (lambda i: None)
+    # tight budget in scheduler-clock ticks); the rest are patient.  With
+    # --preempt/--shed the stream reshapes into a genuine overload trace:
+    # patients become LONG best-effort hogs (the canonical preemption
+    # victims — a slot never frees within an urgent deadline on its own),
+    # the urgent tail gets deadlines of a few chunks and arrives
+    # mid-flight (below) once the hogs pin every slot, and the LAST
+    # urgent request carries a budget no tier can serve inside its
+    # deadline — the fail-fast shed case.
+    overload = args.preempt or args.shed
+    urgent_deadline = (2.5 * args.decode_chunk
+                       if overload else 4.0 * args.max_new)
+    urgent_ids = [i for i in range(args.requests) if i % 3 == 2]
+    deadline_of = (lambda i: urgent_deadline if i % 3 == 2
+                   else None if overload else 50.0 * args.max_new) \
+        if args.slo else (lambda i: None)
+
+    def budget_of(i: int) -> int:
+        if not overload:
+            return 1 + (args.max_new * (i % 4)) // 3
+        if i % 3 == 2:
+            return (3 * args.max_new if urgent_ids and i == urgent_ids[-1]
+                    else min(4, args.max_new))
+        return 3 * args.max_new
+
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
-                    max_new_tokens=1 + (args.max_new * (i % 4)) // 3,
+                    max_new_tokens=budget_of(i),
                     tier=tier_of(i), deadline=deadline_of(i))
             for i in range(args.requests)]
 
-    # The streaming loop: submit everything, step until drained, stream
-    # tokens through the handles' events.
+    # The streaming loop: submit, step until drained, stream tokens
+    # through the handles' events.  Overload mode holds the urgent tail
+    # back until the patient burst occupies the slots.
     t0 = time.time()
-    handles = [engine.submit(r) for r in reqs]
+    urgent_tail = [r for r in reqs
+                   if r.deadline is not None and r.deadline <= urgent_deadline] \
+        if args.preempt or args.shed else []
+    held = {r.uid for r in urgent_tail}
+    handles = [engine.submit(r) for r in reqs if r.uid not in held]
     migrated = None
     events = 0
-    while engine.has_work:
+    while engine.has_work or urgent_tail:
         events += len(engine.step())
+        if urgent_tail and (engine.clock >= 2.0 * args.decode_chunk
+                            or not engine.has_work):
+            handles += [engine.submit(r) for r in urgent_tail]
+            urgent_tail = []
         if args.migrate_demo and migrated is None:
             target = args.tiers[-1]
             for h in handles:
@@ -274,7 +339,9 @@ def main(argv=None):
               "every budget fit one decode chunk; raise --max-new or "
               "lower --decode-chunk")
     results = {h.uid: h.tokens for h in handles}
-    assert results == {r.uid: engine.results[r.uid] for r in reqs}
+    # Shed requests never reach engine.results — check the finished ones.
+    assert all(results[h.uid] == engine.results[h.uid] for h in handles
+               if h.status is RequestStatus.FINISHED)
     toks = sum(len(v) for v in results.values())
     st = engine.stats
     print(f"served {len(reqs)} requests, {toks} tokens "
@@ -291,14 +358,22 @@ def main(argv=None):
               f"migrations={st.tier_migrations} "
               f"kv_migrations={st.kv_migrations})")
     if args.slo:
-        waits = np.array([h.queue_wait for h in handles])
+        waits = np.array([h.queue_wait for h in handles
+                          if h.queue_wait is not None])
         misses = sum(1 for h in handles
-                     if h.request.deadline is not None
+                     if h.status is RequestStatus.FINISHED
+                     and h.request.deadline is not None
                      and h.finished_at > h.submitted_at + h.request.deadline)
         print(f"slo: queue_wait p50={np.percentile(waits, 50):.0f} "
               f"p99={np.percentile(waits, 99):.0f} ticks, "
               f"deadline_misses={misses}/{len(handles)}, "
               f"tier_autoselects={st.tier_autoselects}")
+    if args.preempt or args.shed:
+        shed_uids = [h.uid for h in handles
+                     if h.status is RequestStatus.SHED]
+        print(f"overload: preemptions={st.preemptions} "
+              f"resumes={st.resumes} sheds={st.sheds} "
+              f"spill_bytes={st.spill_bytes} shed_uids={shed_uids}")
     return results
 
 

@@ -13,14 +13,22 @@ blocking ``run`` wrapper — implemented by both engines:
                 status, ``set_tier``), ``TokenEvent``, ``RequestStatus``
 ``scheduler`` — host-side admission over fixed slots with pluggable
                 ``SchedulerPolicy`` (``FIFOPolicy`` default, deadline-aware
-                ``SLOPolicy``)
+                ``SLOPolicy`` with optional preemption/shedding/per-tenant
+                fairness under overload)
 ``slots``     — per-slot cache arena views (reset/refill/requantize one
                 slot in place)
 ``request``   — the ``Request`` dataclass (uid, prompt, budget, tier,
-                deadline)
+                deadline, tenant)
+
+Overload control rides the same surface: ``ServeEngine.preempt(uid)``
+suspends a RUNNING request into a host-side ``SuspendedState`` (optionally
+spilled via ``repro.checkpoint``) for prefill-free, token-identical
+resumption; ``Engine.cancel(uid)`` aborts queued/suspended requests; shed
+requests land in the terminal ``RequestStatus.SHED``.
 """
 from repro.serve.engine import (BatchServeEngine, Engine, EngineStats,
-                                Request, ServeEngine, prepare_params)
+                                Request, ServeEngine, SuspendedState,
+                                prepare_params)
 from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.scheduler import (ANY_TIER, FIFOPolicy, Scheduler,
                                    SchedulerPolicy, SLOPolicy, SlotState)
@@ -29,4 +37,5 @@ from repro.serve.slots import SlotArena
 __all__ = ["ANY_TIER", "BatchServeEngine", "Engine", "EngineStats",
            "FIFOPolicy", "Request", "RequestHandle", "RequestStatus",
            "SLOPolicy", "SchedulerPolicy", "Scheduler", "ServeEngine",
-           "SlotArena", "SlotState", "TokenEvent", "prepare_params"]
+           "SlotArena", "SlotState", "SuspendedState", "TokenEvent",
+           "prepare_params"]

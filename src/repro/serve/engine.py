@@ -38,6 +38,17 @@ through.  The engine mirrors that end to end:
   ``SchedulerPolicy``: ``FIFOPolicy`` (default, bit-identical to the
   historical behaviour) or ``SLOPolicy`` (deadline slack vs. the hwmodel's
   per-tier cycle cost; see ``serve/scheduler.py``).
+* **Overload survival** — ``SLOPolicy`` extensions turn admission into
+  overload control: ``preempt=True`` displaces the slackest RUNNING slot
+  when a deadlined waiting request runs out of slack (``Engine.preempt``
+  snapshots the slot's KV/SSM slice + host decode state into a
+  ``SuspendedState`` — optionally spilled through ``repro.checkpoint`` —
+  and the request later resumes prefill-free, token-identical, in ANY
+  slot); ``shed=True`` refuses (or, with ``auto_tier``, downtiers)
+  deadline requests whose projected completion exceeds modeled capacity;
+  ``tenant_weights`` ages weighted tenants' queued requests faster so one
+  tenant's burst cannot starve another's.  ``Engine.cancel`` aborts
+  QUEUED/SUSPENDED requests without leaking scheduler state.
 * **Per-request KV precision** — a schedule with ``kv_tiers`` allocates one
   mixed per-slot KV arena: each admitted request's slot stores K/V at its
   tier's precision (bf16 / int8 / int4-packed lanes, per-slot scale rows).
@@ -63,8 +74,8 @@ are priced in these ticks, keeping SLO admission fully deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import (Any, Dict, List, Optional, Protocol, Sequence, Set,
-                    Tuple, runtime_checkable)
+from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
+                    Set, Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +83,7 @@ import numpy as np
 import numpy.typing as npt
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import checkpoint as checkpoint_lib
 from repro.core.policy import PrecisionPolicy
 from repro.distributed import sharding_rules, tp_serve
 from repro.distributed.sharding import shard_map
@@ -81,11 +93,12 @@ from repro.models.transformer import LM
 from repro.serve import slots as slots_lib
 from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler, SchedulerPolicy, SLOPolicy
+from repro.serve.scheduler import (RunningEntry, Scheduler, SchedulerPolicy,
+                                   SLOPolicy)
 
 __all__ = ["Request", "RequestHandle", "RequestStatus", "TokenEvent",
            "Engine", "ServeEngine", "BatchServeEngine", "EngineStats",
-           "prepare_params", "PREPARE_CALLS"]
+           "SuspendedState", "prepare_params", "PREPARE_CALLS"]
 
 # Mixed-tier group layout: the jit-STATIC tuple of (tier name, rows) runs
 # describing a tier-sorted decode batch (see Runtime.for_groups).
@@ -215,7 +228,15 @@ class EngineStats:
     ``mixed_tier_chunks`` counts dispatches whose batch held >= 2 tiers.
     ``tier_migrations`` counts successful mid-stream ``set_tier`` calls on
     RUNNING requests; ``kv_migrations`` counts the subset that requantized
-    a live KV lane (the tiers mapped to different KV precisions)."""
+    a live KV lane (the tiers mapped to different KV precisions).
+
+    Overload-control accounting: ``preemptions`` counts RUNNING slots
+    suspended (snapshot + evict), ``resumes`` the prefill-free
+    re-admissions of suspended requests (equal once the engine drains —
+    every suspension either resumes or is cancelled), ``sheds`` the
+    requests refused by admission control or cancelled by the caller, and
+    ``spill_bytes`` the snapshot bytes persisted through the checkpoint
+    spill path (0 when suspensions stay host-resident)."""
 
     prefills: int = 0
     prefill_tokens: int = 0        # real (unpadded) prompt tokens prefilled
@@ -228,6 +249,10 @@ class EngineStats:
     tier_migrations: int = 0       # mid-stream set_tier on RUNNING requests
     kv_migrations: int = 0         # ... of which requantized a live KV lane
     tier_autoselects: int = 0      # deadline-driven admission-time retags
+    preemptions: int = 0           # RUNNING slots suspended (snapshot+evict)
+    resumes: int = 0               # prefill-free re-admissions of suspensions
+    sheds: int = 0                 # admission-control refusals + cancels
+    spill_bytes: int = 0           # snapshot bytes persisted via checkpoint
     layout_cache_hits: int = 0     # group-layout derivations skipped (cache)
     layout_cache_misses: int = 0   # group-layout derivations performed
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
@@ -239,6 +264,31 @@ class EngineStats:
     # tier groups (asserted in tests/test_grouped_kernel.py).
     decode_dispatches: Dict[Any, int] = dataclasses.field(
         default_factory=dict)
+
+
+@dataclasses.dataclass
+class SuspendedState:
+    """Host-side snapshot of one preempted request (``ServeEngine.preempt``).
+
+    Everything a prefill-free resume needs: the request, the tokens already
+    emitted, the decode budget still owed, the last emitted token (the next
+    decode step's input), and the slot's batch-1 cache pytree — KV lanes
+    (with their per-slot tier codes and lengths), scale rows, and SSM state
+    — exactly as :func:`repro.serve.slots.slot_view` cut it from the arena.
+    The snapshot is slot-agnostic: resume may write it into ANY free slot.
+
+    ``cache`` holds the host (numpy) pytree, or None once the snapshot was
+    spilled to disk through :mod:`repro.checkpoint` (``spill_step`` then
+    names the checkpoint step under the engine's ``spill_dir``).
+    ``nbytes`` is the snapshot's byte footprint either way."""
+
+    request: Request
+    tokens: List[int]
+    remaining: int
+    last_token: int
+    cache: Optional[Any]
+    spill_step: Optional[int] = None
+    nbytes: int = 0
 
 
 class _DeferredErrors:
@@ -275,7 +325,9 @@ class Engine(Protocol):
     (submit all, drain, collect — token-identical to the historical API).
     ``clock`` is the deterministic scheduler clock (decode steps executed)
     every submission time, queue wait and ``Request.deadline`` is priced
-    in."""
+    in.  ``cancel`` drops a request that has not finished running (QUEUED,
+    or SUSPENDED on engines that preempt), flipping its handle to the
+    terminal SHED state and releasing every scheduler entry it held."""
 
     def submit(self, request: Request) -> RequestHandle: ...
 
@@ -286,6 +338,8 @@ class Engine(Protocol):
     def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]: ...
 
     def retire(self, uid: int) -> List[int]: ...
+
+    def cancel(self, uid: int) -> None: ...
 
     @property
     def has_work(self) -> bool: ...
@@ -332,7 +386,8 @@ class ServeEngine(_DeferredErrors):
                  fused_decode: bool = True,
                  count_dispatches: bool = False,
                  scheduler_policy: Optional[SchedulerPolicy] = None,
-                 mesh: Optional[Any] = None) -> None:
+                 mesh: Optional[Any] = None,
+                 spill_dir: Optional[str] = None) -> None:
         self.model = model
         # ``fused_decode`` selects the mixed-tier grouped-matmul
         # implementation: one group-switching kernel (default) vs the
@@ -393,6 +448,15 @@ class ServeEngine(_DeferredErrors):
                                        npt.NDArray[np.int32]]] = {}
         self.handles: Dict[int, RequestHandle] = {}
         self._seen_uids: Set[int] = set()
+        # Preemption state: uid -> host snapshot of the suspended slot.
+        # ``spill_dir`` routes snapshots through the checkpoint subsystem
+        # (async atomic step dirs) instead of holding them host-resident.
+        self._suspended: Dict[int, SuspendedState] = {}
+        self._spill_dir = spill_dir
+        self._spiller: Optional[Any] = None        # lazy AsyncCheckpointer
+        self._spill_counter = 0                    # monotonic spill step ids
+        self._slot_template_cache: Optional[Any] = None
+        self._in_round = False                     # guards preempt() reentry
         # Host-mirrored per-slot decode state.
         self._tok: npt.NDArray[np.int32] = np.zeros((max_batch,), np.int32)
         self._remaining: npt.NDArray[np.int32] = np.zeros((max_batch,),
@@ -479,10 +543,15 @@ class ServeEngine(_DeferredErrors):
             # (slot, from-tier, to-tier) combination — slot and code are
             # traced.
             self._migrate_kv = jax.jit(slots_lib.migrate_kv_tier)
+            # Preemption primitives: cut one slot out of the arena as a
+            # batch-1 cache / write a snapshot back into ANY slot — both
+            # with the slot index traced (one trace serves every slot).
+            self._snapshot_slot = jax.jit(slots_lib.slot_view)
+            self._restore_slot = jax.jit(slots_lib.slot_write)
         else:
-            (self._prefill_slot, self._decode_chunk,
-             self._migrate_kv) = self._mesh_wrap(prefill_slot,
-                                                 decode_chunk_fn)
+            (self._prefill_slot, self._decode_chunk, self._migrate_kv,
+             self._snapshot_slot, self._restore_slot) = self._mesh_wrap(
+                 prefill_slot, decode_chunk_fn)
 
     # --------------------------------------------------------------- mesh TP
     def _init_mesh_placement(self, mesh: Any) -> tp_serve.TPConfig:
@@ -606,10 +675,42 @@ class ServeEngine(_DeferredErrors):
                                 fc, slot, code)
             return unflatten(c_def, fc2)
 
+        # Preemption twins: slot_view/slot_write slice the SLOT axis, which
+        # is never sharded, so the cache leaf specs apply to the batch-1
+        # sub-tree unchanged — snapshots come back sharded exactly like the
+        # arena (device_get then assembles the global snapshot), and a host
+        # snapshot restores onto any slot with the arena staying sharded.
+        def sharded_snapshot(caches: Any, slot: Any) -> Any:
+            fc = tuple(jax.tree.leaves(caches))
+
+            def body(fc: Any, slot: Any) -> Any:
+                sub = slots_lib.slot_view(unflatten(c_def, fc), slot)
+                return tuple(jax.tree.leaves(sub))
+
+            fs = shard_map(body, mesh=mesh, in_specs=(c_specs, rep),
+                           out_specs=c_specs, check_vma=False)(fc, slot)
+            return unflatten(c_def, fs)
+
+        def sharded_restore(caches: Any, sub: Any, slot: Any) -> Any:
+            fc = tuple(jax.tree.leaves(caches))
+            fs = tuple(jax.tree.leaves(sub))
+
+            def body(fc: Any, fs: Any, slot: Any) -> Any:
+                out = slots_lib.slot_write(unflatten(c_def, fc),
+                                           unflatten(c_def, fs), slot)
+                return tuple(jax.tree.leaves(out))
+
+            fc2 = shard_map(body, mesh=mesh,
+                            in_specs=(c_specs, c_specs, rep),
+                            out_specs=c_specs, check_vma=False)(fc, fs, slot)
+            return unflatten(c_def, fc2)
+
         return (jax.jit(sharded_prefill, static_argnames=("tier",)),
                 jax.jit(sharded_decode,
                         static_argnames=("n_steps", "tier", "groups")),
-                jax.jit(sharded_migrate))
+                jax.jit(sharded_migrate),
+                jax.jit(sharded_snapshot),
+                jax.jit(sharded_restore))
 
     # ----------------------------------------------------- dispatch counting
     def decode_dispatch_count(self, *, groups: Optional[GroupLayout] = None,
@@ -653,13 +754,22 @@ class ServeEngine(_DeferredErrors):
 
         Host-side: validates against engine limits.  On a tiered engine the
         queued copy always carries a concrete tier name (the schedule's
-        default when the caller left it None)."""
+        default when the caller left it None).
+
+        With an overload-controlling policy (``SLOPolicy(shed=True)``) the
+        policy's admission decision runs HERE, before anything is queued: a
+        deadline request whose projected completion exceeds modeled
+        capacity is refused — its handle comes back already in the terminal
+        SHED state (fail fast beats a guaranteed miss) — or, with
+        ``auto_tier``, downtiered to the fastest-fitting tier (counted in
+        ``EngineStats.tier_autoselects`` like any deadline-driven retag)."""
         _validate_request(request, self.max_len, self._seen_uids)
         if self.schedule is None:
             if request.tier is not None:
                 raise ValueError(
                     f"request {request.uid}: tier {request.tier!r} on an "
                     "engine without a PrecisionSchedule")
+            request = dataclasses.replace(request)
         else:
             # Normalize onto a copy: every QUEUED request carries a concrete
             # tier name, but the caller's object stays untouched.
@@ -673,6 +783,18 @@ class ServeEngine(_DeferredErrors):
         self._seen_uids.add(request.uid)
         handle = RequestHandle(request, self, submitted_at=self.clock)
         self.handles[request.uid] = handle
+        pol = self.scheduler.policy
+        if isinstance(pol, SLOPolicy) and pol.shed:
+            decision = pol.admission_decision(
+                request, list(self.scheduler.waiting), self._running_info(),
+                self.max_batch, self.scheduler.submitted_at, self.clock)
+            if decision == "shed":
+                handle._mark_shed(self.clock)
+                self.stats.sheds += 1
+                return handle
+            if decision != "admit":
+                request.tier = decision        # our normalized copy
+                self.stats.tier_autoselects += 1
         # Handle and scheduler share the SAME (normalized) Request object,
         # so a QUEUED set_tier re-tags the queue entry in place.
         self.scheduler.submit(request, now=self.clock)
@@ -695,12 +817,17 @@ class ServeEngine(_DeferredErrors):
         if tier not in self.schedule.tiers:
             raise ValueError(f"unknown tier {tier!r}; engine serves "
                              f"{sorted(self.schedule.tiers)}")
-        if handle.status is RequestStatus.FINISHED:
-            raise RuntimeError(f"request {handle.uid} already finished; "
-                               "cannot migrate its tier")
+        if handle.done:
+            raise RuntimeError(
+                f"request {handle.uid} already {handle.status.value}; "
+                "cannot migrate its tier")
         old = handle.request.tier
         if tier == old:
             return
+        if handle.status is RequestStatus.SUSPENDED:
+            raise RuntimeError(
+                f"request {handle.uid} is suspended; its KV snapshot is "
+                "pinned at its tier — let it resume (or cancel it) first")
         if handle.status is RequestStatus.QUEUED:
             handle.request.tier = tier      # shared with the queue entry
             return
@@ -720,6 +847,192 @@ class ServeEngine(_DeferredErrors):
         handle.request.tier = tier          # shared with the SlotState
         self.arena.tiers[slot] = tier
         self.stats.tier_migrations += 1
+
+    # ------------------------------------------------------------- preemption
+    @property
+    def suspended(self) -> Dict[int, SuspendedState]:
+        """Read-only view of the live suspensions (uid -> snapshot)."""
+        return dict(self._suspended)
+
+    def _running_info(self) -> List[RunningEntry]:
+        """The RUNNING slots as the overload-control hooks price them:
+        ``(slot, request, decode tokens still owed, submission tick)``."""
+        return [(slot, s.request, int(s.remaining),
+                 self.handles[s.uid].submitted_at)
+                for slot, s in self.scheduler.occupied()]
+
+    def preempt(self, uid: int) -> SuspendedState:
+        """Suspend a RUNNING request, freeing its slot.
+
+        The slot's KV lane slice is cut out of the arena as a batch-1
+        cache (``slot_view`` — every leaf, so the recurrent/SSM state
+        rows, the KV tier code and the cache length ride along), pulled to
+        host memory, and bundled with the host decode state (emitted
+        tokens, owed budget, last emitted token — the next decode input)
+        into a slot-agnostic :class:`SuspendedState`.  With ``spill_dir``
+        the snapshot is persisted through the checkpoint subsystem
+        (async, atomic step dirs) and dropped from host memory.
+
+        The request re-enters the waiting queue at its ORIGINAL submission
+        tick — a preemption never extends its deadline budget — and its
+        handle flips to SUSPENDED.  Re-admission is prefill-free
+        (``slot_write`` into whichever slot frees up) and the resumed
+        stream is token-identical to the uninterrupted run.
+
+        Preemption is only legal BETWEEN scheduling rounds: calling this
+        from inside ``step()`` (e.g. an ``on_token`` callback) raises —
+        mid-round the device cache has already advanced past the host
+        token bookkeeping, so a snapshot there would tear the state."""
+        if self._in_round:
+            raise RuntimeError(
+                "preempt() called from inside a scheduling round (e.g. an "
+                "on_token callback); preemption is only legal between "
+                "engine.step() calls")
+        handle = self.handles.get(uid)
+        if handle is None:
+            raise KeyError(f"unknown uid {uid}")
+        if handle.status is not RequestStatus.RUNNING:
+            raise RuntimeError(
+                f"request {uid} is {handle.status.value}; only RUNNING "
+                "requests can be preempted")
+        slot = handle.slot
+        assert slot is not None
+        state = self.scheduler.evict(slot)
+        sub = self._snapshot_slot(self.arena.caches, jnp.int32(slot))
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), sub)
+        nbytes = int(sum(leaf.nbytes for leaf in jax.tree.leaves(host)))
+        sus = SuspendedState(
+            request=state.request, tokens=list(state.tokens),
+            remaining=int(state.remaining),
+            last_token=int(self._tok[slot]), cache=host, nbytes=nbytes)
+        if self._spill_dir is not None:
+            sus = self._spill(sus)
+        self._suspended[uid] = sus
+        self.arena.tiers[slot] = None
+        handle._mark_suspended()
+        pol = self.scheduler.policy
+        if isinstance(pol, SLOPolicy):
+            # Re-pricing: a half-served stream owes only its remainder.
+            pol.remaining_tokens[uid] = sus.remaining
+        self.scheduler.submit(state.request, now=handle.submitted_at)
+        self.stats.preemptions += 1
+        return sus
+
+    def _policy_preempt(self) -> None:
+        """Run the policy's displacement rule between rounds
+        (``SLOPolicy(preempt=True)``): while a deadlined waiting request
+        is out of slack, free slots cannot absorb the queue, and a
+        strictly-slacker RUNNING victim exists, suspend the victim.  The
+        strict-inequality rule in :meth:`SLOPolicy.preempt_victim`
+        guarantees termination (each displaced request re-enters the queue
+        with MORE slack than the one it yielded to)."""
+        pol = self.scheduler.policy
+        if not isinstance(pol, SLOPolicy) or not pol.preempt:
+            return
+        for _ in range(self.max_batch):      # safety bound, never binding
+            waiting = list(self.scheduler.waiting)
+            urgent = [r for r in waiting if r.deadline is not None
+                      and pol.weighted_slack(r, self.scheduler.submitted_at,
+                                             self.clock) <= pol.preempt_slack]
+            if len(self.scheduler.free_slots()) >= len(urgent):
+                return             # this round's admission absorbs the urgent
+            victim = pol.preempt_victim(
+                waiting, self._running_info(),
+                self.scheduler.submitted_at, self.clock)
+            if victim is None:
+                return
+            self.preempt(victim)
+
+    def _resume_into(self, slot: int, req: Request,
+                     sus: SuspendedState) -> None:
+        """Prefill-free re-admission: write the snapshot's batch-1 cache
+        into the (freshly admitted, possibly different) slot and restore
+        the host decode state exactly where preemption cut it."""
+        cache = sus.cache if sus.cache is not None else self._unspill(sus)
+        self.arena.caches = self._restore_slot(
+            self.arena.caches, cache, jnp.int32(slot))
+        self.arena.tiers[slot] = req.tier
+        state = self.scheduler.slots[slot]
+        assert state is not None
+        state.tokens = list(sus.tokens)
+        state.remaining = sus.remaining
+        self._tok[slot] = sus.last_token
+        self._remaining[slot] = sus.remaining
+        pol = self.scheduler.policy
+        if isinstance(pol, SLOPolicy):
+            pol.remaining_tokens.pop(req.uid, None)
+        self.handles[req.uid]._mark_admitted(slot, self.clock)
+        self.stats.resumes += 1
+
+    def _slot_template(self) -> Any:
+        """Shape/dtype skeleton of one slot's cache slice (restore target
+        for spilled snapshots) — evaluated abstractly, cached."""
+        if self._slot_template_cache is None:
+            self._slot_template_cache = jax.eval_shape(
+                lambda c: slots_lib.slot_view(c, jnp.int32(0)),
+                self.arena.caches)
+        return self._slot_template_cache
+
+    def _spill(self, sus: SuspendedState) -> SuspendedState:
+        """Persist a snapshot through the checkpoint subsystem and drop it
+        from host memory.  ``keep=0`` disables the checkpointer's GC —
+        live spills must never be collected out from under their
+        suspended requests; :meth:`_unspill` removes each step dir as its
+        request resumes."""
+        assert self._spill_dir is not None
+        if self._spiller is None:
+            self._spiller = checkpoint_lib.AsyncCheckpointer(
+                self._spill_dir, keep=0)
+        step = self._spill_counter
+        self._spill_counter += 1
+        self._spiller.save(step, sus.cache, extra={
+            "uid": sus.request.uid, "tokens": sus.tokens,
+            "remaining": sus.remaining, "last_token": sus.last_token,
+            "tier": sus.request.tier})
+        self.stats.spill_bytes += sus.nbytes
+        return dataclasses.replace(sus, cache=None, spill_step=step)
+
+    def _unspill(self, sus: SuspendedState) -> Any:
+        """Read a spilled snapshot back (waiting out the async writer) and
+        delete its step dir — resumed spills do not accumulate on disk."""
+        assert self._spiller is not None and sus.spill_step is not None \
+            and self._spill_dir is not None
+        self._spiller.wait()
+        tree, _ = checkpoint_lib.restore(self._spill_dir, sus.spill_step,
+                                         target=self._slot_template())
+        checkpoint_lib.remove(self._spill_dir, sus.spill_step)
+        return tree
+
+    def cancel(self, uid: int) -> None:
+        """Abort a QUEUED or SUSPENDED request: drop its queue entry (and
+        its submission-clock entry — cancellation must not leak scheduler
+        state), discard any snapshot/spill, and flip its handle to the
+        terminal SHED state with whatever tokens it had streamed.
+
+        RUNNING requests cannot be cancelled directly — preempt first (the
+        slot state must be detached from the device before it can be
+        discarded); already-terminal requests raise."""
+        handle = self.handles.get(uid)
+        if handle is None:
+            raise KeyError(f"unknown uid {uid}")
+        if handle.done:
+            raise RuntimeError(
+                f"request {uid} already {handle.status.value}")
+        if handle.status is RequestStatus.RUNNING:
+            raise RuntimeError(
+                f"request {uid} is running; preempt it first (cancel only "
+                "drops queued/suspended state)")
+        self.scheduler.cancel(uid)
+        sus = self._suspended.pop(uid, None)
+        if sus is not None and sus.spill_step is not None:
+            assert self._spiller is not None and self._spill_dir is not None
+            self._spiller.wait()
+            checkpoint_lib.remove(self._spill_dir, sus.spill_step)
+        pol = self.scheduler.policy
+        if isinstance(pol, SLOPolicy):
+            pol.remaining_tokens.pop(uid, None)
+        handle._mark_shed(self.clock)
+        self.stats.sheds += 1
 
     # ------------------------------------------------------------- scheduling
     def _bucket_pad(self,
@@ -756,7 +1069,12 @@ class ServeEngine(_DeferredErrors):
         """Fill free slots from the waiting queue and prefill each admitted
         request individually (mixed-tier mode: the policy's pick into ANY
         slot; serialized mode: only requests matching the active tier).
-        Returns the prefill-emitted first tokens as events."""
+        Returns the prefill-emitted first tokens as events.
+
+        A SUSPENDED request that wins a slot resumes instead of
+        prefilling: its snapshot is written back into the slot and its
+        decode state picks up exactly where preemption cut it (no event —
+        its already-emitted tokens were streamed before suspension)."""
         events: List[TokenEvent] = []
         for slot in self.scheduler.free_slots():
             if self.schedule is None or self.mixed_tiers:
@@ -776,6 +1094,10 @@ class ServeEngine(_DeferredErrors):
                                            now=self.clock)
             if req is None:
                 break
+            sus = self._suspended.pop(req.uid, None)
+            if sus is not None:
+                self._resume_into(slot, req, sus)
+                continue
             self._auto_select_tier(req)
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
             kv_code = self.schedule.kv_code_for(req.tier) \
@@ -869,12 +1191,28 @@ class ServeEngine(_DeferredErrors):
         mode, or the single active tier in serialized mode) and account its
         tokens.  Returns every token emitted this round (prefill first
         tokens + decode tokens, in emission order); an idle engine returns
-        ``[]`` without dispatching anything."""
+        ``[]`` without dispatching anything.
+
+        With ``SLOPolicy(preempt=True)`` the policy's displacement rule
+        runs FIRST (between rounds — the only point a snapshot is
+        coherent), so displaced slots free before admission fills the
+        round's batch; ``_in_round`` then pins preemption out for the rest
+        of the round (an ``on_token`` callback calling ``preempt`` would
+        tear host state from the already-advanced device cache)."""
         if self.schedule is not None and not self.mixed_tiers:
             if not self.scheduler.occupied():
                 if self._active_tier is not None:  # keep across idle steps
                     self._last_tier = self._active_tier
                 self._active_tier = None           # batch drained: re-tier
+        self._policy_preempt()
+        self._in_round = True
+        try:
+            return self._step_round()
+        finally:
+            self._in_round = False
+
+    def _step_round(self) -> List[TokenEvent]:
+        """The round body (see :meth:`step`): admit, decode, account."""
         events = self._admit_free_slots()
         self._release_done()                       # max_new_tokens == 1 cases
         occupied = self.scheduler.occupied()
@@ -953,16 +1291,19 @@ class ServeEngine(_DeferredErrors):
     def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
         """Blocking compatibility wrapper over the incremental core:
         submit every request, drain, collect — token-identical to the
-        historical batch API."""
+        historical batch API.  A request shed at admission maps to its
+        (empty) partial stream rather than raising."""
         for r in requests:
             self.submit(r)
         finished = self.drain()
-        return {uid: finished[uid] for uid in (r.uid for r in requests)}
+        return {r.uid: finished.get(r.uid, list(self.handles[r.uid].tokens))
+                for r in requests}
 
     def retire(self, uid: int) -> List[int]:
-        """Drop a FINISHED request's host state — its handle (buffered
-        events + tokens), its results entry, and its uid reservation — and
-        return the tokens.
+        """Drop a terminal (FINISHED or SHED) request's host state — its
+        handle (buffered events + tokens), its results entry, and its uid
+        reservation — and return the tokens (a SHED request's partial
+        stream).
 
         This is the long-running server's bound on per-request host
         memory: handles and finished-token lists otherwise live for the
@@ -972,10 +1313,13 @@ class ServeEngine(_DeferredErrors):
             raise KeyError(f"unknown uid {uid}")
         if not handle.done:
             raise RuntimeError(f"request {uid} is {handle.status.value}; "
-                               "only FINISHED requests can be retired")
+                               "only FINISHED/SHED requests can be retired")
+        tokens = self.scheduler.finished.pop(uid, None)
+        if tokens is None:
+            tokens = list(handle.tokens)     # SHED: whatever was streamed
         del self.handles[uid]
         self._seen_uids.discard(uid)
-        return self.scheduler.finished.pop(uid)
+        return tokens
 
     @property
     def results(self) -> Dict[int, List[int]]:
@@ -1078,6 +1422,24 @@ class BatchServeEngine(_DeferredErrors):
             "BatchServeEngine pins one tier for every request; per-request "
             "tier migration needs ServeEngine (mixed_tiers=True)")
 
+    def cancel(self, uid: int) -> None:
+        """Abort a QUEUED request (the reference baseline has no
+        preemption, so only not-yet-batched requests can be cancelled);
+        flips its handle to the terminal SHED state."""
+        handle = self.handles.get(uid)
+        if handle is None:
+            raise KeyError(f"unknown uid {uid}")
+        if handle.done:
+            raise RuntimeError(
+                f"request {uid} already {handle.status.value}")
+        if handle.status is not RequestStatus.QUEUED:
+            raise RuntimeError(
+                f"request {uid} is {handle.status.value}; BatchServeEngine "
+                "can only cancel QUEUED requests (no preemption)")
+        self._queue = [r for r in self._queue if r.uid != uid]
+        handle._mark_shed(self.clock)
+        self.stats.sheds += 1
+
     # ------------------------------------------------------------------- run
     def _start_batch(self) -> None:
         """Form + prefill the next batch (up to ``max_batch`` requests in
@@ -1163,14 +1525,17 @@ class BatchServeEngine(_DeferredErrors):
         return {r.uid: finished[r.uid] for r in requests}
 
     def retire(self, uid: int) -> List[int]:
-        """Drop a FINISHED request's host state and release its uid (same
+        """Drop a terminal request's host state and release its uid (same
         contract as :meth:`ServeEngine.retire`)."""
         handle = self.handles.get(uid)
         if handle is None:
             raise KeyError(f"unknown uid {uid}")
         if not handle.done:
             raise RuntimeError(f"request {uid} is {handle.status.value}; "
-                               "only FINISHED requests can be retired")
+                               "only FINISHED/SHED requests can be retired")
+        tokens = self.results.pop(uid, None)
+        if tokens is None:
+            tokens = list(handle.tokens)     # SHED before batching: empty
         del self.handles[uid]
         self._seen_uids.discard(uid)
-        return self.results.pop(uid)
+        return tokens

@@ -7,8 +7,9 @@ one in-flight request.  The handle exposes
   iterator (``for tok in handle`` drives ``engine.step()`` until the next
   token arrives), and a callback hook (``handle.on_token(fn)``);
 * **terminal status** — ``handle.status`` walks ``QUEUED -> RUNNING ->
-  FINISHED``; ``handle.result()`` drives the engine to completion and
-  returns the full token list;
+  FINISHED`` (with ``SUSPENDED`` excursions under preemption and ``SHED``
+  as the overload-control terminal); ``handle.result()`` drives the engine
+  to completion and returns the full token list;
 * **mid-stream tier migration** — ``handle.set_tier(name)`` re-prices a
   QUEUED request or migrates a RUNNING slot (weight plane-prefix switch at
   the next group-layout derivation + an in-place requantization of the
@@ -27,11 +28,22 @@ from repro.serve.request import Request
 
 
 class RequestStatus(enum.Enum):
-    """Lifecycle of a submitted request (monotonic, host-side)."""
+    """Lifecycle of a submitted request (host-side).
+
+    ``QUEUED -> RUNNING -> FINISHED`` is the happy path.  Under overload
+    control two more states appear: ``SUSPENDED`` (the request was
+    preempted — its slot state lives in a host-side ``SuspendedState`` and
+    it waits in the queue for prefill-free re-admission; it may bounce
+    ``RUNNING -> SUSPENDED -> RUNNING`` any number of times) and ``SHED``
+    (terminal: admission control refused the request, or the caller
+    cancelled it before it finished — its token stream is whatever was
+    emitted before the cut)."""
 
     QUEUED = "queued"        # waiting for a slot
     RUNNING = "running"      # occupies a slot (prefilled, decoding)
+    SUSPENDED = "suspended"  # preempted; snapshot held, waiting to resume
     FINISHED = "finished"    # budget exhausted; tokens complete
+    SHED = "shed"            # terminal: shed by admission control/cancelled
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,12 +108,15 @@ class RequestHandle:
 
     @property
     def done(self) -> bool:
-        return self.status is RequestStatus.FINISHED
+        """True once the request reached a terminal state (FINISHED, or
+        SHED by admission control / ``Engine.cancel``)."""
+        return self.status in (RequestStatus.FINISHED, RequestStatus.SHED)
 
     @property
     def queue_wait(self) -> Optional[float]:
-        """Scheduler-clock ticks spent waiting for a slot (None while
-        QUEUED)."""
+        """Scheduler-clock ticks from submission to FIRST admission (None
+        while QUEUED/SHED-before-admission).  Preempt/resume cycles do not
+        move it: it measures the initial time-to-first-token wait."""
         if self.admitted_at is None:
             return None
         return self.admitted_at - self.submitted_at
@@ -158,7 +173,17 @@ class RequestHandle:
     def _mark_admitted(self, slot: int, now: float) -> None:
         self.status = RequestStatus.RUNNING
         self.slot = slot
-        self.admitted_at = now
+        if self.admitted_at is None:     # resumes keep the FIRST admission
+            self.admitted_at = now
+
+    def _mark_suspended(self) -> None:
+        self.status = RequestStatus.SUSPENDED
+        self.slot = None
+
+    def _mark_shed(self, now: float) -> None:
+        self.status = RequestStatus.SHED
+        self.slot = None
+        self.finished_at = now
 
     def _push(self, event: TokenEvent, now: float,
               defer: Optional[Callable[[BaseException], None]] = None

@@ -26,7 +26,14 @@ class Request:
     scheduler clock (decode steps) FROM SUBMISSION: the request should
     finish within ``deadline`` clock ticks of being submitted.  None means
     best-effort.  Only :class:`~repro.serve.scheduler.SLOPolicy` consults
-    it; the default FIFO admission ignores deadlines entirely."""
+    it; the default FIFO admission ignores deadlines entirely.
+
+    ``tenant`` names the traffic source for per-tenant fairness under
+    overload: :class:`~repro.serve.scheduler.SLOPolicy` built with
+    ``tenant_weights`` ages a weighted tenant's queued requests faster
+    (weighted slack), so one tenant's burst cannot starve another's.
+    None (or an unlisted name) means weight 1.0 — plain unweighted
+    scheduling."""
 
     uid: int
     prompt: npt.NDArray[np.int32]  # [S] int32
@@ -34,3 +41,4 @@ class Request:
                                    # the RequestHandle, or Engine.run)
     tier: Optional[str] = None     # precision tier name (see class docstring)
     deadline: Optional[float] = None   # SLO budget in scheduler-clock ticks
+    tenant: Optional[str] = None   # traffic source (per-tenant fair slack)

@@ -17,7 +17,14 @@ pluggable via the :class:`SchedulerPolicy` protocol:
   (``hwmodel.energy.tier_cost``), admitting the tightest-slack request
   first (earliest-deadline-first with a service-time estimate).  Requests
   without a deadline are best-effort: they fall back to FIFO order among
-  themselves and yield to any deadlined candidate.
+  themselves and yield to any deadlined candidate.  Overload control is
+  opt-in on the same policy: ``preempt=True`` names a RUNNING victim to
+  displace when a queued deadline request's slack runs out
+  (:meth:`SLOPolicy.preempt_victim`), ``shed=True`` refuses (or, with
+  ``auto_tier``, downtiers) requests whose projected completion exceeds
+  the modeled capacity (:meth:`SLOPolicy.admission_decision`), and
+  ``tenant_weights`` ages a weighted tenant's requests faster so one
+  tenant's burst cannot starve another's.
 
 Tier *constraints* are orthogonal to policy: the mixed-tier engine admits
 any tier into any slot (``admit(slot)``), while the tier-SERIALIZED
@@ -72,6 +79,10 @@ class _AnyTier:
 
 ANY_TIER = _AnyTier()   # admit()/peek() sentinel: no tier constraint
 TierFilter = Union[str, None, _AnyTier]
+
+# One RUNNING slot as the overload-control hooks see it:
+# (slot index, request, decode tokens still owed, submission tick).
+RunningEntry = Tuple[int, Request, int, float]
 
 
 class SchedulerPolicy(Protocol):
@@ -132,19 +143,63 @@ class SLOPolicy:
     (necessarily faster), so a tight-deadline request is admitted at a
     faster tier instead of missing its deadline at the requested one.
     Requests whose tier meets the deadline, and best-effort requests,
-    keep their requested tier."""
+    keep their requested tier.
+
+    Overload control (all opt-in, consumed by ``ServeEngine``):
+
+    * ``preempt=True`` — :meth:`preempt_victim` names a RUNNING request to
+      displace when a queued deadline request's weighted slack drops to
+      ``preempt_slack`` (default 0.0) or below AND no slot frees naturally
+      in time.  The victim is the lowest-priority RUNNING request (largest
+      remaining-service slack; best-effort first, lightest tenant first)
+      and must hold STRICTLY more slack than the urgent request — equal
+      urgency never thrashes.
+    * ``shed=True`` — :meth:`admission_decision` projects a new deadline
+      request's completion against modeled capacity (outranking queued +
+      non-displaceable running work, priced by the tier costs, divided
+      over the slots) and answers ``"admit"``, ``"shed"``, or (with
+      ``auto_tier``) a faster tier name to downtier to.  Best-effort
+      requests are always admitted — they wait instead of being refused.
+    * ``tenant_weights`` (tenant name -> weight >= 1.0) — per-tenant
+      fairness: a weighted tenant's queued requests age faster
+      (``weighted_slack`` subtracts ``(weight-1) * queue_age``), so its
+      deadlines tighten sooner and its best-effort requests win FIFO ties
+      against heavier backlogs.  Unlisted tenants (and ``tenant=None``)
+      weigh 1.0, which makes every formula collapse to the unweighted
+      one.
+
+    ``remaining_tokens`` (uid -> tokens still owed) is maintained by the
+    engine for SUSPENDED requests so their re-admission slack and service
+    estimates price only the REMAINING work, not the original budget."""
 
     def __init__(self, schedule: Optional[object] = None, *,
                  tier_costs: Optional[Dict[str, float]] = None,
                  default_cost: float = 1.0,
                  auto_tier: bool = False,
-                 mac_counts: Optional[Mapping[str, float]] = None) -> None:
+                 mac_counts: Optional[Mapping[str, float]] = None,
+                 preempt: bool = False,
+                 preempt_slack: float = 0.0,
+                 shed: bool = False,
+                 tenant_weights: Optional[Mapping[str, float]] = None
+                 ) -> None:
         if tier_costs is None and schedule is not None:
             from repro.hwmodel.energy import relative_tier_costs
             tier_costs = relative_tier_costs(schedule, mac_counts=mac_counts)
         self.tier_costs: Dict[str, float] = dict(tier_costs or {})
         self.default_cost = float(default_cost)
         self.auto_tier = bool(auto_tier)
+        self.preempt = bool(preempt)
+        self.preempt_slack = float(preempt_slack)
+        self.shed = bool(shed)
+        self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
+        for tenant, w in self.tenant_weights.items():
+            if w < 1.0:
+                raise ValueError(f"tenant {tenant!r}: weight {w} < 1.0 "
+                                 "(weights only ever ACCELERATE aging)")
+        # uid -> decode tokens still owed; stamped by the engine when it
+        # suspends a request, cleared at resume/cancel.  Lets slack and
+        # service estimates price partially-served requests correctly.
+        self.remaining_tokens: Dict[int, int] = {}
 
     def cost(self, tier: Optional[str]) -> float:
         """Relative per-token service cost of a tier (cheapest == 1.0)."""
@@ -152,9 +207,18 @@ class SLOPolicy:
             return self.default_cost
         return self.tier_costs.get(tier, self.default_cost)
 
+    def weight(self, tenant: Optional[str]) -> float:
+        """Fairness weight of a tenant (1.0 unless listed)."""
+        if tenant is None:
+            return 1.0
+        return self.tenant_weights.get(tenant, 1.0)
+
     def est_service(self, request: Request) -> float:
-        """Estimated service time of a request in scheduler-clock ticks."""
-        return request.max_new_tokens * self.cost(request.tier)
+        """Estimated REMAINING service time in scheduler-clock ticks
+        (suspended requests price only the tokens still owed)."""
+        owed = self.remaining_tokens.get(request.uid,
+                                         request.max_new_tokens)
+        return owed * self.cost(request.tier)
 
     def slack(self, request: Request, submitted_at: Mapping[int, float],
               now: float) -> float:
@@ -165,6 +229,20 @@ class SLOPolicy:
         due = submitted_at.get(request.uid, now) + request.deadline
         return due - now - self.est_service(request)
 
+    def weighted_slack(self, request: Request,
+                       submitted_at: Mapping[int, float],
+                       now: float) -> float:
+        """Tenant-fair slack: a weighted tenant's queue age counts
+        ``weight`` times, so its deadlines tighten faster.  Identical to
+        :meth:`slack` at weight 1.0 (and for best-effort requests, whose
+        slack stays infinite — their fairness rides the select tie-break
+        instead)."""
+        s = self.slack(request, submitted_at, now)
+        if not math.isfinite(s):
+            return s
+        age = now - submitted_at.get(request.uid, now)
+        return s - (self.weight(request.tenant) - 1.0) * age
+
     def select(self, candidates: Sequence[Request],
                submitted_at: Mapping[int, float],
                now: float) -> Optional[int]:
@@ -173,12 +251,106 @@ class SLOPolicy:
 
         def key(i: int) -> Tuple[float, float, int]:
             r = candidates[i]
-            # Final tie-break is the QUEUE position (candidates arrive in
-            # queue order), so equal-slack requests stay strictly FIFO.
-            return (self.slack(r, submitted_at, now),
-                    submitted_at.get(r.uid, now), i)
+            # Best-effort ties order on WEIGHTED age (== submission order
+            # when no weights are configured, so unweighted behaviour is
+            # bit-identical to the historical key); the final tie-break is
+            # the QUEUE position, so equal requests stay strictly FIFO.
+            age = now - submitted_at.get(r.uid, now)
+            return (self.weighted_slack(r, submitted_at, now),
+                    -self.weight(r.tenant) * age, i)
 
         return min(range(len(candidates)), key=key)
+
+    # ------------------------------------------------------ overload control
+    def preempt_victim(self, waiting: Sequence[Request],
+                       running: Sequence[RunningEntry],
+                       submitted_at: Mapping[int, float],
+                       now: float) -> Optional[int]:
+        """Uid of the RUNNING request to displace, or None.
+
+        Fires only when (a) some queued deadline request's weighted slack
+        has dropped to ``preempt_slack`` or below, (b) no slot frees
+        naturally within that slack (the shortest remaining budget among
+        running slots, in ticks), and (c) some RUNNING request holds
+        STRICTLY more slack than the urgent one — best-effort streams
+        (infinite slack) are the canonical victims, lightest tenant and
+        longest remaining stream first.  Remaining service of the victim
+        is priced like any queued request's, so a resumed victim re-enters
+        admission with the correct residual estimate."""
+        if not self.preempt or not running:
+            return None
+        urgent_slack = math.inf
+        for r in waiting:
+            if r.deadline is None:
+                continue
+            urgent_slack = min(urgent_slack,
+                               self.weighted_slack(r, submitted_at, now))
+        if urgent_slack > self.preempt_slack:
+            return None
+        free_in = min(rem for _, _, rem, _ in running)
+        if free_in <= max(urgent_slack, 0.0):
+            return None            # a slot frees in time on its own
+
+        def victim_key(entry: RunningEntry) -> Tuple[float, float, int, int]:
+            slot, req, rem, tick = entry
+            if req.deadline is None:
+                s = math.inf
+            else:
+                s = (tick + req.deadline) - now - rem * self.cost(req.tier)
+            return (s, -self.weight(req.tenant), rem, -slot)
+
+        victim = max(running, key=victim_key)
+        if victim_key(victim)[0] <= urgent_slack:
+            return None            # nobody is strictly lower priority
+        return victim[1].uid
+
+    def admission_decision(self, request: Request,
+                           waiting: Sequence[Request],
+                           running: Sequence[RunningEntry],
+                           num_slots: int,
+                           submitted_at: Mapping[int, float],
+                           now: float) -> str:
+        """Admission control at submit time: ``"admit"``, ``"shed"``, or a
+        tier name to downtier to (``auto_tier`` only).
+
+        Capacity model: work that OUTRANKS the incoming request — queued
+        requests with tighter-or-equal weighted slack, plus running work
+        that cannot be displaced (deadlined streams with tighter slack;
+        everything running when ``preempt`` is off) — must be served
+        first.  Projected wait is that outranking service divided over the
+        slots; the request is feasible at a tier iff wait + its priced
+        service fits the deadline budget.  Best-effort requests are always
+        admitted (they wait; preemption protects the urgent ones from
+        them), so shedding only ever refuses work that would MISS."""
+        if not self.shed or request.deadline is None:
+            return "admit"
+        budget = float(request.deadline)     # submitted at ``now``
+        s_req = budget - self.est_service(request)
+        ahead = 0.0
+        for r in waiting:
+            if self.weighted_slack(r, submitted_at, now) <= s_req:
+                ahead += self.est_service(r)
+        for _, req, rem, tick in running:
+            service = rem * self.cost(req.tier)
+            if req.deadline is None:
+                if not self.preempt:
+                    ahead += service
+                continue               # displaceable best-effort stream
+            run_slack = (tick + req.deadline) - now - service
+            if run_slack <= s_req or not self.preempt:
+                ahead += service
+        wait = ahead / max(num_slots, 1)
+
+        def feasible(cost: float) -> bool:
+            return wait + request.max_new_tokens * cost <= budget
+
+        if feasible(self.cost(request.tier)):
+            return "admit"
+        if self.auto_tier and self.tier_costs:
+            fits = [t for t in self.tier_costs if feasible(self.tier_costs[t])]
+            if fits:
+                return max(fits, key=lambda t: (self.tier_costs[t], t))
+        return "shed"
 
     def select_tier(self, request: Request, submitted_at_tick: float,
                     now: float) -> Optional[str]:
@@ -287,10 +459,38 @@ class Scheduler:
                                      remaining=req.max_new_tokens)
         return req
 
+    def cancel(self, uid: int) -> bool:
+        """Drop a WAITING request: remove it from the queue AND its
+        submission-clock entry.  Returns True when the uid was queued.
+
+        This is the QUEUED-cancellation leak fix: before it existed, the
+        only path that pruned ``submitted_at`` was admission, so a request
+        abandoned while still QUEUED kept its clock entry (and queue slot)
+        for the engine's lifetime — ``has_work`` never drained."""
+        for i, r in enumerate(self.waiting):
+            if r.uid == uid:
+                del self.waiting[i]
+                self.submitted_at.pop(uid, None)
+                return True
+        self.submitted_at.pop(uid, None)
+        return False
+
     # ------------------------------------------------------------- lifecycle
     def occupied(self) -> List[Tuple[int, SlotState]]:
         """(slot index, state) for every occupied slot."""
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def evict(self, slot: int) -> SlotState:
+        """Free an occupied slot WITHOUT recording it finished — the
+        preemption half of :meth:`release`.  Returns the evicted state
+        (request, emitted tokens, remaining budget) so the engine can
+        snapshot it into a ``SuspendedState`` and later re-enqueue the
+        request for prefill-free resumption."""
+        state = self.slots[slot]
+        if state is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        return state
 
     def release(self, slot: int) -> SlotState:
         """Free a finished slot, recording its output tokens."""

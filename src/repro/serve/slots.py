@@ -29,14 +29,21 @@ SLOT_AXIS = 1   # cache leaves are [n_periods, B, ...]
 
 
 def slot_view(caches: Any, slot: Any) -> Any:
-    """Extract slot ``slot`` as a batch-1 cache pytree (traced-index ok)."""
+    """Extract slot ``slot`` as a batch-1 cache pytree (traced-index ok).
+
+    Slicing EVERY leaf on the slot axis makes the view self-contained: the
+    KV tier codes and per-period lengths ride along with the lanes, so the
+    same view doubles as the preemption snapshot (``ServeEngine.preempt``)
+    — restoring it into ANY free slot via :func:`slot_write` reproduces
+    the suspended request's decode state exactly, whatever its KV tier."""
     return jax.tree.map(
         lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS),
         caches)
 
 
 def slot_write(caches: Any, sub: Any, slot: Any) -> Any:
-    """Write a batch-1 cache pytree back into slot ``slot``."""
+    """Write a batch-1 cache pytree back into slot ``slot`` (the KV
+    migration scratch path and the preemption restore path)."""
     def put(a: Any, s: Any) -> Any:
         idx = [0] * a.ndim
         idx[SLOT_AXIS] = slot

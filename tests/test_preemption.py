@@ -1,0 +1,404 @@
+"""Overload survival: slot preemption, spill/restore, shedding, cancel.
+
+The contract under test, end to end:
+
+* **Token identity** — a preempted-and-resumed request's final token
+  stream is bit-identical to its uninterrupted run, across mixed weight
+  tiers x KV-cache tiers (bf16 / int8 / int4-packed), through
+  resume-into-a-DIFFERENT-slot, after a mid-stream ``set_tier``
+  migration, and on a 2-device tensor-parallel mesh (subprocess with fake
+  devices).
+* **Spill/restore** — ``spill_dir`` routes snapshots through the
+  checkpoint subsystem (atomic async step dirs) and back, byte-clean:
+  same tokens, step dirs deleted as requests resume, stale ``.tmp`` dirs
+  ignored.
+* **State hygiene** — cancelling a QUEUED request leaks no scheduler
+  state (the submitted-clock regression), SUSPENDED/SHED guard rails on
+  ``set_tier`` / ``preempt`` / ``cancel`` hold, and the policy-level
+  displacement/shedding rules are deterministic host arithmetic.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.policy import uniform_schedule
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve import (Request, RequestStatus, Scheduler, ServeEngine,
+                         SLOPolicy, SuspendedState)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TIERS = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+KV_TIERS = {"8/8": None, "4/4": 8, "2/2": 4}   # bf16 / int8 / int4-packed
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule(TIERS, kv_tiers=KV_TIERS)
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    return cfg, model, params, sched, rt
+
+
+def _requests(cfg, n, *, seed=0, max_new=8, tiers=("8/8", "4/4", "2/2")):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=3 + i % 4),
+                    max_new_tokens=max_new, tier=tiers[i % len(tiers)])
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, tier=r.tier,
+                    deadline=r.deadline, tenant=r.tenant) for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def reference(setup):
+    """Uninterrupted tokens for the shared request set (bit-stability:
+    batch composition and admission order never change a request's
+    stream, so ONE reference run covers every preemption schedule)."""
+    cfg, model, params, sched, rt = setup
+    reqs = _requests(cfg, 3)
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    return reqs, eng.run(_clone(reqs))
+
+
+# --------------------------------------------------------- token identity
+def test_preempt_resume_token_identity_mixed_tiers(setup, reference):
+    """Preempt every request once, mid-stream, across all three weight x
+    KV tiers; the drained streams must equal the uninterrupted run's."""
+    cfg, model, params, sched, rt = setup
+    reqs, want = reference
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    handles = {r.uid: eng.submit(r) for r in _clone(reqs)}
+    preempted = set()
+    for _ in range(64):
+        if not eng.has_work:
+            break
+        eng.step()
+        for uid, h in handles.items():
+            if (uid not in preempted and h.status is RequestStatus.RUNNING
+                    and len(h.tokens) >= 2):
+                sus = eng.preempt(uid)
+                assert isinstance(sus, SuspendedState)
+                assert h.status is RequestStatus.SUSPENDED
+                assert sus.tokens == h.tokens and sus.cache is not None
+                preempted.add(uid)
+                break
+    finished = eng.drain()
+    assert preempted == set(want)         # every request was suspended once
+    assert finished == want
+    assert eng.stats.preemptions == 3 and eng.stats.resumes == 3
+    assert eng.stats.spill_bytes == 0     # no spill_dir: host-resident
+    assert eng.suspended == {}
+
+
+def test_resume_into_different_slot(setup, reference):
+    """Preempt BOTH running requests and re-admit in swapped order: each
+    resumes in the OTHER slot, token streams unchanged."""
+    cfg, model, params, sched, rt = setup
+    reqs, want = reference
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    a, b = _clone(reqs[:2])
+    ha, hb = eng.submit(a), eng.submit(b)
+    eng.step()
+    slot_a, slot_b = ha.slot, hb.slot
+    assert {slot_a, slot_b} == {0, 1}
+    eng.preempt(b.uid)      # FIFO re-queues b BEFORE a: admission swaps
+    eng.preempt(a.uid)
+    eng.step()
+    assert ha.slot == slot_b and hb.slot == slot_a
+    finished = eng.drain()
+    assert finished == {r.uid: want[r.uid] for r in (a, b)}
+
+
+def test_preempt_after_kv_migration(setup):
+    """set_tier (KV lane requantized in place) THEN preempt: the snapshot
+    carries the migrated KV precision, and the resumed stream matches an
+    uninterrupted run migrated at the same point."""
+    cfg, model, params, sched, rt = setup
+    req = _requests(cfg, 1, seed=7, tiers=("8/8",))[0]   # bf16 KV start
+
+    def serve(preempt_after_migration):
+        eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                          decode_chunk=2)
+        h = eng.submit(_clone([req])[0])
+        while len(h.tokens) < 2:
+            eng.step()
+        h.set_tier("2/2")            # bf16 -> int4-packed KV, live
+        if preempt_after_migration:
+            eng.preempt(req.uid)
+        eng.drain()
+        assert eng.stats.kv_migrations == 1
+        return h.tokens
+
+    assert serve(True) == serve(False)
+
+
+def test_mesh_preempt_resume_token_identity():
+    """2-device TP mesh: sharded snapshot/restore round-trips through
+    preemption token-identically (subprocess: fake devices need XLA_FLAGS
+    before jax import)."""
+    body = """
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.core.policy import uniform_schedule
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models.layers import Runtime
+        from repro.models.transformer import LM
+        from repro.serve import Request, ServeEngine
+
+        cfg = reduced_config("granite-3-8b")
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        sched = uniform_schedule({"8/8": (8, 8), "2/2": (2, 2)},
+                                 kv_tiers={"8/8": None, "2/2": 4})
+        rt = Runtime(policy=sched.policy_for(), mode="serve",
+                     moe_dropless=True, schedule=sched)
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, cfg.vocab_size, size=4) for _ in range(2)]
+
+        def reqs():
+            return [Request(uid=i, prompt=prompts[i], max_new_tokens=6,
+                            tier=t)
+                    for i, t in enumerate(("8/8", "2/2"))]
+
+        def serve(mesh, preempt):
+            eng = ServeEngine(model, params, rt, max_batch=2, max_len=32,
+                              decode_chunk=2, mesh=mesh)
+            handles = [eng.submit(r) for r in reqs()]
+            eng.step()
+            if preempt:
+                eng.preempt(0)
+                eng.preempt(1)
+            out = eng.drain()
+            assert not preempt or eng.stats.resumes == 2
+            return out
+
+        mesh = make_serve_mesh(2)
+        want = serve(None, False)
+        assert serve(mesh, False) == want     # sharded == unsharded
+        assert serve(mesh, True) == want      # + preempt/resume on mesh
+        print("MESH_PREEMPT_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "MESH_PREEMPT_OK" in r.stdout
+
+
+# ----------------------------------------------------------- spill/restore
+def test_spill_restore_roundtrip(setup, reference, tmp_path):
+    """spill_dir: snapshots go to atomic step dirs and come back
+    byte-clean; resumed spills are deleted; stale .tmp dirs are inert."""
+    cfg, model, params, sched, rt = setup
+    reqs, want = reference
+    spill = tmp_path / "spill"
+    os.makedirs(spill / "step_00000099.tmp")     # crash debris: ignored
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2, spill_dir=str(spill))
+    handles = {r.uid: eng.submit(r) for r in _clone(reqs[:2])}
+    eng.step()
+    sus = eng.preempt(0)
+    assert sus.cache is None and sus.spill_step is not None
+    assert sus.nbytes > 0 and eng.stats.spill_bytes == sus.nbytes
+    eng._spiller.wait()
+    assert (spill / "step_00000000" / "manifest.json").exists()
+    finished = eng.drain()
+    assert finished == {r.uid: want[r.uid] for r in reqs[:2]}
+    assert not (spill / "step_00000000").exists()   # unspilled + removed
+    assert (spill / "step_00000099.tmp").exists()   # untouched debris
+
+
+def test_cancel_suspended_removes_spill(setup, tmp_path):
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2, spill_dir=str(tmp_path))
+    h = eng.submit(_requests(cfg, 1, seed=5)[0])
+    eng.step()
+    eng.preempt(0)
+    eng._spiller.wait()
+    assert (tmp_path / "step_00000000").exists()
+    eng.cancel(0)
+    assert h.status is RequestStatus.SHED
+    assert not (tmp_path / "step_00000000").exists()
+    assert not eng.has_work and eng.suspended == {}
+    assert eng.retire(0) == h.tokens
+
+
+# ------------------------------------------------- state hygiene / guards
+def test_cancel_queued_drops_submitted_clock():
+    """The QUEUED-cancellation leak, regression-tested at the scheduler
+    level: cancel must drop the waiting entry AND its submitted-clock
+    entry (policies age requests off that map)."""
+    s = Scheduler(1)
+    s.submit(Request(uid=7, prompt=np.zeros(2, np.int32)), now=3.0)
+    assert 7 in s.submitted_at
+    assert s.cancel(7) is True
+    assert s.waiting == type(s.waiting)() and s.submitted_at == {}
+    assert s.cancel(7) is False            # idempotent on unknown uids
+
+
+def test_engine_cancel_queued_no_leak(setup, reference):
+    cfg, model, params, sched, rt = setup
+    reqs, want = reference
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2)
+    handles = [eng.submit(r) for r in _clone(reqs)]
+    eng.step()                              # 0,1 running; 2 queued
+    assert handles[2].status is RequestStatus.QUEUED
+    eng.cancel(2)
+    assert handles[2].status is RequestStatus.SHED
+    assert 2 not in eng.scheduler.submitted_at
+    assert eng.stats.sheds == 1
+    finished = eng.drain()
+    assert finished == {r.uid: want[r.uid] for r in reqs[:2]}
+    assert eng.retire(2) == []              # partial stream: nothing yet
+    eng.submit(_clone(reqs[2:])[0])         # retired uid is reusable
+    assert eng.drain()[2] == want[2]
+
+
+def test_preempt_and_cancel_guard_rails(setup):
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2)
+    r0, r1 = _requests(cfg, 2, seed=9)
+    h0, h1 = eng.submit(r0), eng.submit(r1)
+    # preempt() from inside a round (on_token callback) must raise —
+    # registered BEFORE any event so no out-of-round replay fires it.
+    errs = []
+
+    def cb(ev):
+        try:
+            eng.preempt(ev.uid)
+        except RuntimeError as e:
+            errs.append(e)
+
+    h0.on_token(cb)
+    with pytest.raises(KeyError):
+        eng.preempt(99)
+    with pytest.raises(RuntimeError, match="only RUNNING"):
+        eng.preempt(r0.uid)                  # still QUEUED
+    eng.step()
+    assert errs and "scheduling round" in str(errs[0])
+    with pytest.raises(RuntimeError, match="preempt it first"):
+        eng.cancel(r0.uid)                   # RUNNING
+    eng.preempt(r0.uid)                      # between rounds: fine
+    with pytest.raises(RuntimeError, match="suspended"):
+        h0.set_tier("2/2")                   # snapshot pinned at its tier
+    with pytest.raises(RuntimeError, match="only RUNNING"):
+        eng.preempt(r0.uid)                  # already SUSPENDED
+    eng.drain()
+    with pytest.raises(RuntimeError):
+        eng.cancel(r0.uid)                   # already FINISHED
+    assert h0.done and h1.done
+
+
+# ----------------------------------------------- policy rules (host only)
+def _entry(slot, uid, *, deadline=None, tier=None, tenant=None, rem=8,
+           tick=0.0, max_new=8):
+    r = Request(uid=uid, prompt=np.zeros(2, np.int32),
+                max_new_tokens=max_new, tier=tier, deadline=deadline,
+                tenant=tenant)
+    return (slot, r, rem, tick)
+
+
+def test_preempt_victim_rule():
+    pol = SLOPolicy(tier_costs={"hi": 4.0, "lo": 1.0}, preempt=True)
+    urgent = Request(uid=1, prompt=np.zeros(2, np.int32), max_new_tokens=4,
+                     tier="lo", deadline=2.0)
+    sub = {1: 0.0}
+    running = [_entry(0, 10, rem=20),                    # best-effort
+               _entry(1, 11, deadline=100.0, rem=4, tier="lo")]
+    # Urgent slack = 0+2 - 0 - 4 = -2 <= 0: displace the best-effort slot.
+    assert pol.preempt_victim([urgent], running, sub, now=0.0) == 10
+    # A slot freeing in time (rem <= slack floor) suppresses preemption.
+    soon = [_entry(0, 10, rem=0)]
+    assert pol.preempt_victim([urgent], soon, sub, now=0.0) is None
+    # No strictly-slacker victim: equal urgency never thrashes.
+    tight = [_entry(0, 10, deadline=2.0, rem=4, tier="lo", tick=0.0)]
+    assert pol.preempt_victim([urgent], tight, sub, now=0.0) is None
+    # Patient waiting request: nobody displaced.
+    patient = Request(uid=2, prompt=np.zeros(2, np.int32),
+                      max_new_tokens=1, tier="lo", deadline=500.0)
+    assert pol.preempt_victim([patient], running, {2: 0.0}, now=0.0) is None
+    # Disabled policy never names a victim.
+    off = SLOPolicy(tier_costs={"lo": 1.0})
+    assert off.preempt_victim([urgent], running, sub, now=0.0) is None
+
+
+def test_admission_decision_shed_and_downtier():
+    pol = SLOPolicy(tier_costs={"hi": 4.0, "lo": 1.0}, shed=True)
+    mk = lambda **kw: Request(uid=0, prompt=np.zeros(2, np.int32), **kw)
+    # Best-effort: always admitted.
+    assert pol.admission_decision(mk(max_new_tokens=99), [], [], 2, {},
+                                  0.0) == "admit"
+    # Feasible at own tier on an idle engine.
+    assert pol.admission_decision(
+        mk(max_new_tokens=4, tier="lo", deadline=10.0),
+        [], [], 2, {}, 0.0) == "admit"
+    # Infeasible at any tier: shed.
+    assert pol.admission_decision(
+        mk(max_new_tokens=4, tier="lo", deadline=2.0),
+        [], [], 2, {}, 0.0) == "shed"
+    # auto_tier: downtier to the highest-cost tier that still fits.
+    auto = SLOPolicy(tier_costs={"hi": 4.0, "lo": 1.0}, shed=True,
+                     auto_tier=True)
+    assert auto.admission_decision(
+        mk(max_new_tokens=4, tier="hi", deadline=8.0),
+        [], [], 2, {}, 0.0) == "lo"
+    # Outranking queued work pushes the projection past the deadline.
+    rival = mk(max_new_tokens=40, tier="lo", deadline=1.0)
+    rival = Request(uid=5, prompt=rival.prompt, max_new_tokens=40,
+                    tier="lo", deadline=1.0)
+    assert pol.admission_decision(
+        mk(max_new_tokens=4, tier="lo", deadline=10.0),
+        [rival], [], 1, {5: 0.0}, 0.0) == "shed"
+    # Non-displaceable running work counts too (preempt off).
+    busy = [_entry(0, 9, rem=40, tier="lo")]
+    assert pol.admission_decision(
+        mk(max_new_tokens=4, tier="lo", deadline=10.0),
+        [], busy, 1, {}, 0.0) == "shed"
+    # With preempt on, best-effort running work is displaceable: admit.
+    both = SLOPolicy(tier_costs={"hi": 4.0, "lo": 1.0}, shed=True,
+                     preempt=True)
+    assert both.admission_decision(
+        mk(max_new_tokens=4, tier="lo", deadline=10.0),
+        [], busy, 1, {}, 0.0) == "admit"
+
+
+def test_tenant_weighted_slack_and_validation():
+    pol = SLOPolicy(tier_costs={"lo": 1.0},
+                    tenant_weights={"gold": 3.0})
+    mk = lambda uid, tenant: Request(
+        uid=uid, prompt=np.zeros(2, np.int32), max_new_tokens=4,
+        tier="lo", deadline=100.0, tenant=tenant)
+    sub = {1: 0.0, 2: 0.0}
+    a, b = mk(1, None), mk(2, "gold")
+    # Equal raw slack, but gold's age counts 3x: it wins at now=10.
+    assert pol.weighted_slack(a, sub, 10.0) > pol.weighted_slack(b, sub, 10.0)
+    assert pol.select([a, b], sub, 10.0) == 1
+    # Weight 1.0 tenants collapse to the unweighted ordering.
+    flat = SLOPolicy(tier_costs={"lo": 1.0})
+    assert flat.weighted_slack(b, sub, 10.0) == flat.slack(b, sub, 10.0)
+    assert flat.select([a, b], sub, 10.0) == 0   # pure FIFO tie-break
+    with pytest.raises(ValueError, match="weight"):
+        SLOPolicy(tier_costs={"lo": 1.0}, tenant_weights={"x": 0.5})

@@ -242,6 +242,47 @@ def fastest_tier(schedule: Any,
     return min(sorted(costs), key=lambda t: costs[t])
 
 
+def speculative_cycles_per_token(accept_rate: float, k: int,
+                                 draft_cost: float,
+                                 verify_cost: float) -> float:
+    """Modeled cycles per EMITTED token of one self-speculative round
+    (draft k tokens at the plane-prefix draft tier, verify the window in
+    one verify-tier forward), vs. ``verify_cost`` for plain decoding.
+
+    Under the standard i.i.d. per-position acceptance model with rate
+    ``a``, a round emits ``E + 1`` tokens where ``E = sum_{i=1..k} a^i``
+    is the expected accepted-prefix length (the ``+1`` is the bonus token:
+    the correction on rejection, the extra verify-tier sample on full
+    acceptance), so::
+
+        cycles/token = (k * draft_cost + W_v) / (E + 1)
+
+    ``W_v`` is the verify window's cost: the window is ONE (k+1)-position
+    batched forward through the same grouped GEMMs as decode, so on the
+    paper's weight-stationary array its weight-plane passes amortize over
+    the window — we charge one ``verify_cost`` for the pass plus the
+    marginal activation work of the k extra positions at the bit-serial
+    activation fraction (``act_marginal``).  Costs are in the same units
+    as :func:`relative_tier_costs` (relative cycles/token), so speculation
+    pays off whenever the result drops below ``verify_cost``.
+
+    The engine's measured counterpart is
+    ``EngineStats.spec_verify_steps / spec_emitted`` (verify-tier steps
+    per emitted token) with measured ``accept_rate =
+    spec_accepted / spec_drafted``."""
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if draft_cost <= 0.0 or verify_cost <= 0.0:
+        raise ValueError("tier costs must be positive")
+    expected_accepted = sum(accept_rate ** i for i in range(1, k + 1))
+    act_marginal = 0.5          # bit-serial activation share of a position
+    verify_window = verify_cost * (1.0 + act_marginal * k)
+    round_cycles = k * draft_cost + verify_window
+    return round_cycles / (expected_accepted + 1.0)
+
+
 # Published comparison rows (Table III), scaled-to-28nm values as printed.
 TABLE3_OTHERS = {
     "TVLSI22_bitparallel": {"peak_tops": 4.12, "eff_8bit": 3.62,

@@ -281,7 +281,14 @@ def bitserial_matmul_pallas(x_int8: jax.Array, qw: QuantizedWeight, *,
     sorted into contiguous tier groups and ONE group-switching kernel
     (``grouped_matmul``) serves every group from a single grid — per-row
     plane multipliers select each row's plane-prefix depth, so no per-group
-    dispatch loop remains (bit-identical to per-group calls)."""
+    dispatch loop remains (bit-identical to per-group calls).
+
+    ``row_groups`` always counts LEADING-axis rows.  Extra leading dims
+    (e.g. the speculative verify window's ``[B, W, K]`` input) flatten to
+    ``B*W`` flat rows and each group's row count scales by the static
+    ``reps = W`` factor — window positions inherit their slot's tier, so
+    the whole ``k+1``-token verify window runs through the same single
+    grid as a 1-token decode step."""
     if row_groups is not None:
         if sum(r for r, _ in row_groups) != x_int8.shape[0]:
             raise ValueError(f"row_groups {row_groups} do not cover leading "

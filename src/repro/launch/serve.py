@@ -41,6 +41,19 @@ refused at submit (terminal SHED status) instead of missing late:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --tiers 8/8 4/4 2/2 --slo --preempt --shed --requests 12
+
+Self-speculative decoding from the plane prefix (--speculate): every
+request drafts --spec-k tokens per round at the --draft-tier plane prefix
+of the SAME superplane store, verifies the window in ONE batched forward
+at its own tier, and rolls rejected positions back — greedy streams are
+token-identical to non-speculative decoding at the verify tier.
+--temperature/--top-k switch the whole stream to seeded stochastic
+sampling (deterministic across eager/jit and mesh widths):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 --speculate --draft-tier 4/4 --spec-k 4 --requests 6
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --tiers 8/8 4/4 --temperature 0.8 --top-k 40 --requests 6
 """
 from __future__ import annotations
 
@@ -130,6 +143,27 @@ def main(argv=None):
                          "to the unsharded engine.  On CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N for fake "
                          "devices")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative decoding: draft --spec-k tokens "
+                         "per round at the --draft-tier plane prefix, "
+                         "verify the window in one batched forward at each "
+                         "request's own tier (greedy streams are token-"
+                         "identical to non-speculative decoding; needs "
+                         "--tiers, mixed admission)")
+    ap.add_argument("--draft-tier", default=None, metavar="W/A",
+                    help="with --speculate: the draft tier (must be one of "
+                         "--tiers; default: the last, lowest-precision "
+                         "--tiers entry)")
+    ap.add_argument("--spec-k", type=int, default=4, metavar="K",
+                    help="with --speculate: draft tokens per round "
+                         "(default 4)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "default); seeded, deterministic across eager/jit "
+                         "and mesh widths")
+    ap.add_argument("--top-k", type=int, default=0, metavar="K",
+                    help="with --temperature > 0: restrict sampling to the "
+                         "K highest-probability tokens (0 = full vocab)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -210,6 +244,32 @@ def main(argv=None):
     if args.auto_tier and (schedule is None or args.serialize_tiers):
         ap.error("--auto-tier needs runtime tiers with mixed admission "
                  "(--tiers/--schedule-file, no --serialize-tiers)")
+    if args.speculate:
+        if not args.tiers:
+            ap.error("--speculate drafts at a plane-prefix tier; it needs "
+                     "--tiers (or --schedule-file)")
+        if args.serialize_tiers or args.baseline:
+            ap.error("--speculate needs mixed-tier admission (drop "
+                     "--serialize-tiers / --baseline)")
+        if args.mesh:
+            ap.error("--speculate is not supported on a mesh engine yet; "
+                     "drop --mesh")
+        if args.spec_k < 1:
+            ap.error(f"--spec-k must be >= 1, got {args.spec_k}")
+        if args.draft_tier is None:
+            args.draft_tier = args.tiers[-1]
+        elif args.draft_tier not in args.tiers:
+            ap.error(f"--draft-tier {args.draft_tier} is not one of the "
+                     f"serving tiers {args.tiers}")
+    elif args.draft_tier is not None:
+        ap.error("--draft-tier needs --speculate")
+    if args.temperature < 0.0:
+        ap.error(f"--temperature must be >= 0, got {args.temperature}")
+    if args.top_k < 0:
+        ap.error(f"--top-k must be >= 0, got {args.top_k}")
+    if args.temperature > 0.0 and args.baseline:
+        ap.error("--temperature needs the continuous-batching engine; the "
+                 "baseline decodes greedily (drop --baseline)")
     mesh = None
     if args.mesh:
         if args.baseline:
@@ -300,10 +360,20 @@ def main(argv=None):
                     else min(4, args.max_new))
         return 3 * args.max_new
 
+    sampling = None
+    if args.temperature > 0.0 or args.top_k > 0:
+        from repro.spec import SamplingParams
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, seed=args.seed)
+    spec = None
+    if args.speculate:
+        from repro.spec import SpecConfig
+        spec = SpecConfig(draft_tier=args.draft_tier, k=args.spec_k)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
                     max_new_tokens=budget_of(i),
-                    tier=tier_of(i), deadline=deadline_of(i))
+                    tier=tier_of(i), deadline=deadline_of(i),
+                    sampling=sampling, spec=spec)
             for i in range(args.requests)]
 
     # The streaming loop: submit, step until drained, stream tokens
@@ -368,6 +438,16 @@ def main(argv=None):
               f"p99={np.percentile(waits, 99):.0f} ticks, "
               f"deadline_misses={misses}/{len(handles)}, "
               f"tier_autoselects={st.tier_autoselects}")
+    if args.speculate:
+        acc = (st.spec_accepted / st.spec_drafted
+               if st.spec_drafted else 0.0)
+        vpt = (st.spec_verify_steps / st.spec_emitted
+               if st.spec_emitted else float("nan"))
+        print(f"speculate: rounds={st.spec_rounds} k={args.spec_k} "
+              f"draft={args.draft_tier} "
+              f"accepted={st.spec_accepted}/{st.spec_drafted} "
+              f"({acc:.0%}) emitted={st.spec_emitted} "
+              f"verify_steps/token={vpt:.2f}")
     if args.preempt or args.shed:
         shed_uids = [h.uid for h in handles
                      if h.status is RequestStatus.SHED]

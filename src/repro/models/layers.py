@@ -644,7 +644,8 @@ def attention_init(key, cfg, dtype=jnp.bfloat16):
 
 def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
                     positions=None, cache: Optional[KVCache] = None,
-                    cache_start=None, seq_lengths=None, active=None):
+                    cache_start=None, seq_lengths=None, active=None,
+                    verify_window: bool = False):
     """GQA attention with RoPE (+ optional qk_norm).  If `cache` is given,
     runs in incremental mode: S > 1 prefills the cache from position 0
     (right-padded prompts supported via ``seq_lengths`` [B], the true token
@@ -655,7 +656,15 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
     does NOT append at the fill point (per-slot lengths have no single
     append position).  Chunked prefill must pass ``cache_start`` (and gets
     the uniform-start semantics); otherwise S > 1 means prefill-from-
-    scratch.  Returns (out, new_cache)."""
+    scratch — EXCEPT under ``verify_window``, the speculative verify
+    path: S > 1 tokens append at each slot's own fill point, with the
+    q/k/v/o projections batched over the window (per-row quantization +
+    exact integer accumulation make them bit-identical to S separate
+    decode projections) and the attention core replaying ``append`` +
+    ``decode_attention`` per position, so position j's output — and its
+    KV write — is bit-identical to the j-th sequential decode step
+    (flash_attention's blocked online softmax would NOT be: it
+    reassociates the reduction).  Returns (out, new_cache)."""
     b, s, d = x.shape
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     if rt.tp is not None:
@@ -671,7 +680,7 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
     if positions is None:
         if cache_start is not None:
             base = jnp.asarray(cache_start, jnp.int32).reshape(-1, 1)
-        elif cache is not None and s == 1:
+        elif cache is not None and (s == 1 or verify_window):
             base = cache.length[:, None]   # append at each slot's fill point
         else:
             base = jnp.zeros((1, 1), jnp.int32)    # prefill from scratch
@@ -699,6 +708,21 @@ def attention_apply(params, x, rt: Runtime, cfg, name: str, *,
         if s == 1:
             new_cache = cache.append(k, v, active=active)
             out = decode_attention(q, new_cache)
+        elif verify_window:
+            # Speculative verify: per-position append + decode_attention
+            # replay (see docstring — the batched work happened in the
+            # projections; the core stays sequential for bit-identity).
+            qs = jnp.swapaxes(q, 0, 1)[:, :, None]     # [S, B, 1, H, dh]
+            ks = jnp.swapaxes(k, 0, 1)[:, :, None]
+            vs = jnp.swapaxes(v, 0, 1)[:, :, None]
+
+            def vstep(c, xs):
+                q_t, k_t, v_t = xs
+                c2 = c.append(k_t, v_t, active=active)
+                return c2, decode_attention(q_t, c2)
+
+            new_cache, outs = jax.lax.scan(vstep, cache, (qs, ks, vs))
+            out = jnp.swapaxes(outs[:, :, 0], 0, 1)    # [B, S, H, dh]
         else:
             start = 0 if cache_start is None else cache_start
             new_cache = cache.update(k, v, start, new_length=seq_lengths)

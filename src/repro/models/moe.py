@@ -49,16 +49,25 @@ def _expert_ffn(params, xe, rt: layers.Runtime, name: str):
                          params["down_proj"]["w"], xe)
 
 
-def moe_apply(params, x, rt: layers.Runtime, cfg, name: str):
+def moe_apply(params, x, rt: layers.Runtime, cfg, name: str,
+              dropless: Optional[bool] = None):
     """Returns (y, aux_loss).  x: [B, S, d].
 
     Dispatch is PER SEQUENCE (vmapped over the batch dim): every scatter /
     gather carries a leading batch dimension, so GSPMD shards it over the
     data axis instead of replicating (a flat global-token scatter forces
     involuntary full rematerialization at 1M+ tokens).  Capacity is therefore
-    per-sequence: C = round(S * k * cf / E)."""
+    per-sequence: C = round(S * k * cf / E).
+
+    ``dropless`` overrides ``rt.moe_dropless`` for this call.  The
+    speculative verify window passes True: a single-token decode step can
+    never drop (its one token always fits capacity >= 1), so a multi-token
+    window only stays bit-identical per position to sequential decoding if
+    its capacity also admits every token."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
+    if dropless is None:
+        dropless = rt.moe_dropless
 
     # Router in f32 (kept dense — not matmul-array work in the paper's sense).
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
@@ -73,7 +82,7 @@ def moe_apply(params, x, rt: layers.Runtime, cfg, name: str):
     mean_prob = jnp.mean(probs, axis=(0, 1))
     aux = e * jnp.sum(density * mean_prob)
 
-    if rt.moe_dropless:
+    if dropless:
         capacity = s          # worst case: a whole sequence to one expert
     else:
         capacity = int(max(1, round(s * k * cfg.capacity_factor / e)))

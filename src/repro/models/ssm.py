@@ -128,9 +128,45 @@ jax.tree_util.register_dataclass(
     SSMCache, data_fields=["conv", "state"], meta_fields=[])
 
 
+def _decode_core(params, cfg, conv_cache, state, conv_in_t, dtp_t, a, active):
+    """One token of the O(1) decode recurrence.
+
+    Shared verbatim by the single-token decode path and the speculative
+    verify-window replay, so every window position is bit-identical to
+    the sequential decode step it stands in for.  ``conv_cache``:
+    [B, W-1, C] f32; ``state``: [B, H, N, P] f32; ``conv_in_t``:
+    [B, 1, C] (compute dtype); ``dtp_t``: [B, H] f32 (softplus'd dt);
+    ``a``: [H] f32 negative.  Returns (y [B, H, P] f32, new_conv,
+    new_state), with ``active`` masking the cache updates (the output for
+    inactive rows is garbage the caller discards, as in decode)."""
+    di, ns = cfg.d_inner, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    window = jnp.concatenate([conv_cache.astype(conv_in_t.dtype), conv_in_t],
+                             axis=1)                             # [B, W, C]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32)) \
+        + params["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)[:, None, :].astype(conv_in_t.dtype)
+    new_conv = window[:, 1:].astype(jnp.float32)
+    if active is not None:
+        new_conv = jnp.where(active[:, None, None], new_conv, conv_cache)
+    xc, bc, cc = jnp.split(conv_out, [di, di + ns], axis=-1)
+    xh = xc.reshape(-1, 1, h, p)
+    # S' = exp(a dt) S + dt B (x)^T ; y = C.S' + D x
+    la = jnp.exp(a[None, :] * dtp_t)                             # [B, H]
+    dtx = xh[:, 0].astype(jnp.float32) * dtp_t[:, :, None]
+    s_new = la[:, :, None, None] * state \
+        + jnp.einsum("bn,bhp->bhnp", bc[:, 0].astype(jnp.float32), dtx)
+    y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), s_new) \
+        + params["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+    if active is not None:
+        s_new = jnp.where(active[:, None, None, None], s_new, state)
+    return y, new_conv, s_new
+
+
 def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
               cache: Optional[SSMCache] = None, seq_lengths=None,
-              active=None):
+              active=None, verify_window: bool = False):
     """Mamba2 block.  Full-sequence when cache is None (train/prefill);
     single-token state update when cache is given and S == 1.
 
@@ -139,6 +175,16 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
     window is gathered ending at each row's true length (exact vs an
     unpadded run).  ``active`` [B] masks the decode state/conv update for
     finished slots (continuous batching).
+
+    ``verify_window`` (cache given, S > 1) is the speculative verify
+    path: the in/out projections run batched over the window (the
+    grouped-GEMM savings), while the conv + SSD recurrence replays the
+    EXACT single-token decode core sequentially over the S positions —
+    so position j's output is bit-identical to the j-th sequential
+    decode step.  The returned cache is per-step STACKED ([S, B, ...]
+    leaves): SSM state rolls back by re-selection, so the engine picks
+    the snapshot at each slot's accepted length
+    (``slots.select_verify_step``).
     Returns (y, new_cache)."""
     b, s, d = x.shape
     di, ns, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
@@ -151,17 +197,41 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
         zxbcdt, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
     conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # [B, S, di+2ns]
 
+    a = -jnp.exp(params["A_log"])                           # [H], negative
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"][None, None, :])  # [B, S, H] f32
+    if seq_lengths is not None and s > 1:
+        # Pad positions get dt = 0 => log_a = 0 and dtx = 0: they advance
+        # neither the state nor any real token's output (exact masking).
+        real = jnp.arange(s)[None, :] < seq_lengths[:, None]   # [B, S]
+        dtp = jnp.where(real[:, :, None], dtp, 0.0)
+
     new_cache = None
     if cache is not None and s == 1:
-        window = jnp.concatenate([cache.conv.astype(conv_in.dtype), conv_in],
-                                 axis=1)                         # [B, W, C]
-        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
-                              params["conv_w"].astype(jnp.float32)) \
-            + params["conv_b"].astype(jnp.float32)
-        conv_out = jax.nn.silu(conv_out)[:, None, :].astype(conv_in.dtype)
-        new_conv = window[:, 1:].astype(jnp.float32)
-        if active is not None:
-            new_conv = jnp.where(active[:, None, None], new_conv, cache.conv)
+        y, new_conv, s_new = _decode_core(params, cfg, cache.conv,
+                                          cache.state, conv_in, dtp[:, 0],
+                                          a, active)
+        y = y[:, None]                                      # [B, 1, H, P]
+        new_cache = SSMCache(new_conv, s_new)
+    elif cache is not None and verify_window:
+        # Speculative verify: replay the decode core over the window.  The
+        # in-projection above (and the out-projection below) ran batched;
+        # only the O(1)-state core is sequential, and each step of it is
+        # the decode step verbatim.
+        steps = (jnp.swapaxes(conv_in, 0, 1)[:, :, None, :],   # [S, B, 1, C]
+                 jnp.swapaxes(dtp, 0, 1))                      # [S, B, H]
+
+        def vstep(carry, xs):
+            conv_c, state_c = carry
+            conv_t, dtp_t = xs
+            y_t, conv_n, state_n = _decode_core(params, cfg, conv_c, state_c,
+                                                conv_t, dtp_t, a, active)
+            return (conv_n, state_n), (y_t, conv_n, state_n)
+
+        _, (ys, convs, states) = jax.lax.scan(
+            vstep, (cache.conv, cache.state), steps)
+        y = jnp.swapaxes(ys, 0, 1)                          # [B, S, H, P]
+        new_cache = SSMCache(convs, states)                 # [S, B, ...]
     else:
         conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
                                             params["conv_b"])
@@ -185,30 +255,8 @@ def ssm_apply(params, x, rt: layers.Runtime, cfg, name: str, *,
                     [cache.conv[:, s:].astype(conv_in.dtype), conv_in], axis=1)
             new_conv = tail.astype(jnp.float32)
 
-    xc, bc, cc = jnp.split(conv_out, [di, di + ns], axis=-1)
-    xh = xc.reshape(b, s, h, p)
-    a = -jnp.exp(params["A_log"])                           # [H], negative
-    dtp = jax.nn.softplus(dt.astype(jnp.float32)
-                          + params["dt_bias"][None, None, :])  # [B, S, H] f32
-    if seq_lengths is not None and s > 1:
-        # Pad positions get dt = 0 => log_a = 0 and dtx = 0: they advance
-        # neither the state nor any real token's output (exact masking).
-        real = jnp.arange(s)[None, :] < seq_lengths[:, None]   # [B, S]
-        dtp = jnp.where(real[:, :, None], dtp, 0.0)
-
-    if cache is not None and s == 1:
-        # O(1) decode: S' = exp(a dt) S + dt B (x)^T ; y = C.S' + D x
-        la = jnp.exp(a[None, :] * dtp[:, 0])                # [B, H]
-        dtx = xh[:, 0].astype(jnp.float32) * dtp[:, 0, :, None]
-        s_new = la[:, :, None, None] * cache.state \
-            + jnp.einsum("bn,bhp->bhnp", bc[:, 0].astype(jnp.float32), dtx)
-        y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), s_new) \
-            + params["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
-        y = y[:, None]                                      # [B, 1, H, P]
-        if active is not None:
-            s_new = jnp.where(active[:, None, None, None], s_new, cache.state)
-        new_cache = SSMCache(new_conv, s_new)
-    else:
+        xc, bc, cc = jnp.split(conv_out, [di, di + ns], axis=-1)
+        xh = xc.reshape(b, s, h, p)
         y = _ssd_chunked(xh, dtp, a, bc, cc, params["D"], cfg.ssm_chunk)
         if cache is not None:
             # Prefill with cache: recompute final state via a 1-chunk pass is

@@ -76,7 +76,7 @@ class LM:
         return shard(logits, "batch", None, "model")
 
     def _period_body(self, blk_params, x, rt, caches=None, seq_lengths=None,
-                     active=None):
+                     active=None, verify_window=False):
         cfg = self.cfg
         new_caches: Dict[str, Any] = {}
         aux = jnp.zeros((), jnp.float32)
@@ -87,11 +87,13 @@ class LM:
             if mixer == "attn":
                 out, nc = layers.attention_apply(
                     blk["attn"], h, rt, cfg, f"layers.pos{i}.attn", cache=c,
-                    seq_lengths=seq_lengths, active=active)
+                    seq_lengths=seq_lengths, active=active,
+                    verify_window=verify_window)
             else:
                 out, nc = ssm.ssm_apply(
                     blk["mamba"], h, rt, cfg, f"layers.pos{i}.mamba", cache=c,
-                    seq_lengths=seq_lengths, active=active)
+                    seq_lengths=seq_lengths, active=active,
+                    verify_window=verify_window)
             x = x + out
             if caches is not None:
                 new_caches[f"pos{i}"] = nc
@@ -101,8 +103,13 @@ class LM:
                     out2 = layers.mlp_apply(blk["mlp"], h2, rt,
                                             f"layers.pos{i}.mlp")
                 else:
+                    # Verify windows force dropless dispatch: single-token
+                    # decode never drops, so position-wise bit-identity
+                    # needs every window token admitted too.
                     out2, a = moe.moe_apply(blk["moe"], h2, rt, cfg,
-                                            f"layers.pos{i}.moe")
+                                            f"layers.pos{i}.moe",
+                                            dropless=True if verify_window
+                                            else None)
                     aux = aux + a
                 x = x + out2
         # Residual stream sharded 2D (batch x d_model): the scan carry is what
@@ -112,7 +119,7 @@ class LM:
         return x, aux, new_caches
 
     def _stack(self, params, x, rt, caches=None, seq_lengths=None,
-               active=None):
+               active=None, verify_window=False):
         if caches is None:
             def body(carry, pp):
                 xx, aux = carry
@@ -129,7 +136,8 @@ class LM:
             pp, pc = xs
             xx, a, nc = self._period_body(pp, xx, rt, caches=pc,
                                           seq_lengths=seq_lengths,
-                                          active=active)
+                                          active=active,
+                                          verify_window=verify_window)
             return (xx, aux + a), nc
 
         (x, aux), new_caches = jax.lax.scan(
@@ -199,4 +207,27 @@ class LM:
         x = self._embed(params, tokens, embeds)
         x, _, new_caches = self._stack(params, x, rt, caches=caches,
                                        active=active)
+        return self._head(params, x, rt), new_caches
+
+    def verify_step(self, params, rt, caches, tokens, active=None):
+        """Multi-token speculative verify: teacher-forced decode of a
+        ``[B, W]`` window at each active slot's own fill point.
+
+        ONE batched forward — every projection (and the LM head) runs
+        over all W positions at once through the same grouped GEMMs as
+        decode — whose position-j output is bit-identical to the j-th of
+        W sequential :meth:`decode_step` calls (the attention/SSM cores
+        replay the exact decode recurrences internally; see
+        ``layers.attention_apply(verify_window=True)`` /
+        ``ssm.ssm_apply(verify_window=True)``).  ``active`` [B] masks
+        every cache write, so plain slots sharing the batch flow through
+        untouched.  KV caches come back appended by W (the engine rolls
+        rejected positions back by a length truncation —
+        ``slots.truncate_kv_lengths``); SSM caches come back per-step
+        STACKED ([S, B, ...] leaves) for rollback by re-selection
+        (``slots.select_verify_step``).
+        Returns (logits [B, W, V], new caches)."""
+        x = self._embed(params, tokens)
+        x, _, new_caches = self._stack(params, x, rt, caches=caches,
+                                       active=active, verify_window=True)
         return self._head(params, x, rt), new_caches

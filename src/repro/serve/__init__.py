@@ -18,7 +18,13 @@ blocking ``run`` wrapper — implemented by both engines:
 ``slots``     — per-slot cache arena views (reset/refill/requantize one
                 slot in place)
 ``request``   — the ``Request`` dataclass (uid, prompt, budget, tier,
-                deadline, tenant)
+                deadline, tenant, sampling, spec)
+
+Sampling and self-speculative decoding (``repro.spec``) plug in through
+two request fields re-exported here: ``SamplingParams`` (seeded
+temperature / top-k selection inside the jitted decode chunk) and
+``SpecConfig`` (draft k tokens at a plane-prefix tier, verify the window
+at the request's own tier in one batched forward).
 
 Overload control rides the same surface: ``ServeEngine.preempt(uid)``
 suspends a RUNNING request into a host-side ``SuspendedState`` (optionally
@@ -33,9 +39,10 @@ from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.scheduler import (ANY_TIER, FIFOPolicy, Scheduler,
                                    SchedulerPolicy, SLOPolicy, SlotState)
 from repro.serve.slots import SlotArena
+from repro.spec import SamplingParams, SpecConfig
 
 __all__ = ["ANY_TIER", "BatchServeEngine", "Engine", "EngineStats",
            "FIFOPolicy", "Request", "RequestHandle", "RequestStatus",
-           "SLOPolicy", "SchedulerPolicy", "Scheduler", "ServeEngine",
-           "SlotArena", "SlotState", "SuspendedState", "TokenEvent",
-           "prepare_params"]
+           "SLOPolicy", "SamplingParams", "SchedulerPolicy", "Scheduler",
+           "ServeEngine", "SlotArena", "SlotState", "SpecConfig",
+           "SuspendedState", "TokenEvent", "prepare_params"]

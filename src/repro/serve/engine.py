@@ -95,6 +95,8 @@ from repro.serve.handle import RequestHandle, RequestStatus, TokenEvent
 from repro.serve.request import Request
 from repro.serve.scheduler import (RunningEntry, Scheduler, SchedulerPolicy,
                                    SLOPolicy)
+from repro.spec import sampling as sampling_lib
+from repro.spec import speculate as spec_lib
 
 __all__ = ["Request", "RequestHandle", "RequestStatus", "TokenEvent",
            "Engine", "ServeEngine", "BatchServeEngine", "EngineStats",
@@ -236,7 +238,20 @@ class EngineStats:
     every suspension either resumes or is cancelled), ``sheds`` the
     requests refused by admission control or cancelled by the caller, and
     ``spill_bytes`` the snapshot bytes persisted through the checkpoint
-    spill path (0 when suspensions stay host-resident)."""
+    spill path (0 when suspensions stay host-resident).
+    ``time_slice_preemptions`` counts the voluntary yields of best-effort
+    slots under ``SLOPolicy(time_slice=N)``.
+
+    Speculative-decoding accounting (``Request.spec``): a round of draft
+    depth k counts ``k`` draft-tier decode steps (``spec_draft_steps``)
+    plus ONE verify window forward (``spec_verify_steps``) — both also
+    roll into ``decode_steps`` (k+1 clock ticks per round).
+    ``spec_drafted`` counts proposed draft tokens, ``spec_accepted`` the
+    drafts that survived verification, and ``spec_emitted`` every token a
+    speculative round emitted (accepted drafts + correction/bonus
+    tokens), so ``spec_accepted / spec_drafted`` is the acceptance rate
+    and ``spec_verify_steps / spec_emitted`` the verify-tier steps per
+    emitted token (< 1 iff speculation beats plain decoding)."""
 
     prefills: int = 0
     prefill_tokens: int = 0        # real (unpadded) prompt tokens prefilled
@@ -253,6 +268,13 @@ class EngineStats:
     resumes: int = 0               # prefill-free re-admissions of suspensions
     sheds: int = 0                 # admission-control refusals + cancels
     spill_bytes: int = 0           # snapshot bytes persisted via checkpoint
+    time_slice_preemptions: int = 0  # voluntary best-effort time-slice yields
+    spec_rounds: int = 0           # speculative rounds dispatched
+    spec_draft_steps: int = 0      # draft-tier decode steps (k per round)
+    spec_verify_steps: int = 0     # verify window forwards (1 per round)
+    spec_drafted: int = 0          # draft tokens proposed (k per spec slot)
+    spec_accepted: int = 0         # drafts accepted by verification
+    spec_emitted: int = 0          # tokens emitted by speculative rounds
     layout_cache_hits: int = 0     # group-layout derivations skipped (cache)
     layout_cache_misses: int = 0   # group-layout derivations performed
     decode_steps_by_tier: Dict[str, int] = dataclasses.field(
@@ -280,7 +302,10 @@ class SuspendedState:
     ``cache`` holds the host (numpy) pytree, or None once the snapshot was
     spilled to disk through :mod:`repro.checkpoint` (``spill_step`` then
     names the checkpoint step under the engine's ``spill_dir``).
-    ``nbytes`` is the snapshot's byte footprint either way."""
+    ``nbytes`` is the snapshot's byte footprint either way.  ``draws`` is
+    the slot's sampling draw counter at suspension — the resumed stream
+    continues the request's private PRNG stream exactly where it stopped
+    (token-identical to the uninterrupted sampled run)."""
 
     request: Request
     tokens: List[int]
@@ -289,6 +314,7 @@ class SuspendedState:
     cache: Optional[Any]
     spill_step: Optional[int] = None
     nbytes: int = 0
+    draws: int = 0
 
 
 class _DeferredErrors:
@@ -461,18 +487,35 @@ class ServeEngine(_DeferredErrors):
         self._tok: npt.NDArray[np.int32] = np.zeros((max_batch,), np.int32)
         self._remaining: npt.NDArray[np.int32] = np.zeros((max_batch,),
                                                           np.int32)
+        # Per-slot sampling state (repro.spec.sampling), mirrored on host
+        # and passed traced into every decode dispatch: raw request PRNG
+        # keys, draw counters, temperature, top-k.  Greedy slots keep
+        # temperature 0 and never advance their counter, so the sampled
+        # streams are pure functions of (seed, draw index) — independent
+        # of slot assignment, batch composition and chunk boundaries.
+        self._key: npt.NDArray[np.uint32] = np.zeros((max_batch, 2),
+                                                     np.uint32)
+        self._draws: npt.NDArray[np.int32] = np.zeros((max_batch,), np.int32)
+        self._temp: npt.NDArray[np.float32] = np.zeros((max_batch,),
+                                                       np.float32)
+        self._topk: npt.NDArray[np.int32] = np.zeros((max_batch,), np.int32)
+        # Time-slice fairness bookkeeping: the scheduler-clock tick each
+        # slot's CURRENT occupancy began (set at admission AND at resume).
+        self._slice_start: Dict[int, float] = {}
         mixed_kv = self._mixed_kv
 
         def prefill_slot(params: Any, caches: Any, slot: Any, tokens: Any,
-                         length: Any, kv_code: Any,
-                         tier: Optional[str] = None,
+                         length: Any, kv_code: Any, key: Any, temp: Any,
+                         topk: Any, tier: Optional[str] = None,
                          tp: Optional[tp_serve.TPConfig] = None
                          ) -> Tuple[Any, Any]:
             """Admit one request: reset slot, prefill its prompt (right-
             padded to a bucket), write the batch-1 cache back into the
             arena.  ``tier`` is STATIC (retraces only per prompt bucket x
-            tier); ``slot``, ``tokens``, ``length`` and ``kv_code`` (the
-            slot's KV tier, 16/8/4) are traced.  ``tp`` (static) is set
+            tier); ``slot``, ``tokens``, ``length``, ``kv_code`` (the
+            slot's KV tier, 16/8/4) and the sampling scalars (``key``
+            uint32 [2], ``temp``, ``topk`` — draw counter 0 selects the
+            request's FIRST token) are traced.  ``tp`` (static) is set
             only when called inside the mesh wrapper's shard_map body."""
             rt_eff = self.rt.for_tier(tier)
             if tp is not None:
@@ -485,14 +528,18 @@ class ServeEngine(_DeferredErrors):
                 params, rt_eff, sub, tokens=tokens,
                 seq_lengths=length.reshape(1))
             caches = slots_lib.slot_write(caches, sub, slot)
-            tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
-            return tok, caches
+            tok, _ = sampling_lib.sample_tokens(
+                logits[:, -1], key[None, :], jnp.zeros((1,), jnp.int32),
+                temp.reshape(1), topk.reshape(1))
+            return tok[0], caches
 
         def decode_chunk_fn(params: Any, caches: Any, tok: Any,
                             remaining: Any, perm: Any, n_steps: int,
                             tier: Optional[str] = None,
                             groups: Optional[GroupLayout] = None,
-                            tp: Optional[tp_serve.TPConfig] = None) -> Any:
+                            tp: Optional[tp_serve.TPConfig] = None,
+                            sampling: Optional[Tuple[Any, Any, Any, Any]]
+                            = None) -> Any:
             """The single jitted inner loop: ``n_steps`` decode steps as one
             lax.scan with an active mask.  A slot's budget hitting zero
             freezes its cache (masked writes) THAT step; its lane still
@@ -504,7 +551,17 @@ class ServeEngine(_DeferredErrors):
             the tier-sorted batch, served in ONE step via per-row-group
             plane-prefix GEMMs; ``tier`` (serialized mode) runs the whole
             batch at one tier.  ``perm`` (traced) maps batch rows into the
-            sorted group order and changes per chunk without retracing."""
+            sorted group order and changes per chunk without retracing.
+
+            ``sampling`` — the traced ``(keys [B,2] uint32, draws [B]
+            i32, temperature [B] f32, top_k [B] i32)`` tuple — moves
+            token selection into the scan (``spec.sampling``): rows with
+            temperature 0 still take the raw-logits argmax exactly, so a
+            greedy batch stays bit-identical to the legacy path.  The
+            engine always passes it; ``None`` keeps the historical
+            trace/signature for direct lowering callers
+            (``decode_dispatch_count`` and HLO-inspection tests) and
+            returns the legacy 5-tuple without draw state."""
             if groups is not None:
                 rt_eff = self.rt.for_groups(groups, perm)
             else:
@@ -512,20 +569,135 @@ class ServeEngine(_DeferredErrors):
             if tp is not None:
                 rt_eff = dataclasses.replace(rt_eff, tp=tp)
 
-            def step(carry: Any, _: Any) -> Any:
-                tok, caches, remaining = carry
+            if sampling is None:
+                def step(carry: Any, _: Any) -> Any:
+                    tok, caches, remaining = carry
+                    active = remaining > 0
+                    logits, caches = self.model.decode_step(
+                        params, rt_eff, caches, tokens=tok[:, None],
+                        active=active)
+                    nxt = jnp.argmax(logits[:, -1],
+                                     axis=-1).astype(jnp.int32)
+                    tok = jnp.where(active, nxt, tok)
+                    remaining = remaining - active.astype(jnp.int32)
+                    return (tok, caches, remaining), (tok, active)
+
+                (tok, caches, remaining), (toks, actives) = jax.lax.scan(
+                    step, (tok, caches, remaining), None, length=n_steps)
+                return caches, tok, remaining, toks, actives
+
+            keys, draws, temp, topk = sampling
+
+            def sstep(carry: Any, _: Any) -> Any:
+                tok, caches, remaining, draws = carry
                 active = remaining > 0
                 logits, caches = self.model.decode_step(
                     params, rt_eff, caches, tokens=tok[:, None],
                     active=active)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                nxt, draws = sampling_lib.sample_tokens(
+                    logits[:, -1], keys, draws, temp, topk, active=active)
                 tok = jnp.where(active, nxt, tok)
                 remaining = remaining - active.astype(jnp.int32)
-                return (tok, caches, remaining), (tok, active)
+                return (tok, caches, remaining, draws), (tok, active)
 
-            (tok, caches, remaining), (toks, actives) = jax.lax.scan(
-                step, (tok, caches, remaining), None, length=n_steps)
-            return caches, tok, remaining, toks, actives
+            (tok, caches, remaining, draws), (toks, actives) = jax.lax.scan(
+                sstep, (tok, caches, remaining, draws), None, length=n_steps)
+            return caches, tok, remaining, draws, toks, actives
+
+        def spec_round_fn(params: Any, caches: Any, tok: Any,
+                          remaining: Any, perm_draft: Any, perm_verify: Any,
+                          spec_mask: Any,
+                          sampling: Tuple[Any, Any, Any, Any], k: int,
+                          draft_groups: GroupLayout,
+                          verify_groups: GroupLayout) -> Any:
+            """One speculative round: k chained draft steps at the draft
+            layout, then ONE multi-token verify forward at the normal
+            layout, acceptance, and cache rollback — all inside one jit.
+
+            Draft phase: spec slots (``spec_mask``) decode at their draft
+            tier (``draft_groups`` retags just their rows — a plane
+            prefix of the same preloaded store, zero re-preparation)
+            WITHOUT consuming budget; plain slots sharing the batch run
+            these k steps as ordinary decode steps (their tokens/actives
+            come back in ``dtoks``/``dact``).  The spec slots' draft-tier
+            cache writes are then discarded (``slots.merge_slots``).
+
+            Verify phase: the (k+1)-token window ``[t0, d1..dk]`` runs
+            through ``model.verify_step`` — one batched forward whose
+            position-j logits are bit-identical to sequential decode.
+            Acceptance is rejection sampling against the verify-tier
+            distributions (greedy rows degenerate to exact prefix match),
+            ``e = min(m+1, remaining)`` tokens emit, and the KV/SSM lanes
+            of rejected positions roll back (length truncation +
+            stacked-step re-selection).  ``k`` and the two layouts are
+            STATIC; masks, budgets, permutations and sampling state are
+            traced."""
+            keys, draws, temp, topk = sampling
+            rt_draft = self.rt.for_groups(draft_groups, perm_draft)
+            rt_verify = self.rt.for_groups(verify_groups, perm_verify)
+            orig = caches
+            tok0 = tok
+
+            def draft_step(carry: Any, _: Any) -> Any:
+                tok, caches, remaining, draws = carry
+                active = remaining > 0
+                plain_active = active & (~spec_mask)
+                logits, caches = self.model.decode_step(
+                    params, rt_draft, caches, tokens=tok[:, None],
+                    active=active)
+                row = logits[:, -1]
+                qp = sampling_lib.sampling_probs(row, temp, topk)
+                nxt, draws = sampling_lib.sample_tokens(
+                    row, keys, draws, temp, topk, active=active)
+                tok = jnp.where(active, nxt, tok)
+                # Spec slots draft beyond their budget accounting: they
+                # spend ``remaining`` only at emission (verify) time.
+                remaining = remaining - plain_active.astype(jnp.int32)
+                return (tok, caches, remaining, draws), (tok, plain_active,
+                                                         qp)
+
+            (tok, caches, remaining, draws), (dtoks, dact, qps) = \
+                jax.lax.scan(draft_step, (tok, caches, remaining, draws),
+                             None, length=k)
+
+            # Discard the spec slots' draft-tier cache writes; plain slots
+            # keep theirs (their draft-phase steps were real decode steps).
+            caches = slots_lib.merge_slots(caches, orig, spec_mask)
+
+            drafts = jnp.swapaxes(dtoks, 0, 1)                   # [B, k]
+            window = jnp.concatenate([tok0[:, None], drafts], axis=1)
+            vlogits, caches = self.model.verify_step(
+                params, rt_verify, caches, tokens=window, active=spec_mask)
+
+            batch, width = window.shape                  # width == k + 1
+            p = sampling_lib.sampling_probs(
+                vlogits.reshape(batch * width, -1),
+                jnp.repeat(temp, width),
+                jnp.repeat(topk, width)).reshape(batch, width, -1)
+            q = jnp.swapaxes(qps, 0, 1)                       # [B, k, V]
+            m = spec_lib.accept_counts(drafts, q, p, keys, draws)
+            corr = spec_lib.correction_tokens(q, p, m, keys, draws)
+            emit = spec_lib.emission_window(drafts, corr, m)
+            e = jnp.where(spec_mask, jnp.minimum(m + 1, remaining), 0)
+
+            # Rollback: rewind the KV lengths of rejected window positions
+            # and re-select each slot's SSM state at its last emitted
+            # position (plain rows: e == 0, mask False, stacked entries
+            # all equal their pre-verify state — untouched either way).
+            last_idx = jnp.clip(e - 1, 0, width - 1)
+            caches = slots_lib.truncate_kv_lengths(
+                caches, jnp.int32(width) - e, spec_mask)
+            caches = slots_lib.select_verify_step(caches, last_idx)
+
+            last = jnp.take_along_axis(emit, last_idx[:, None],
+                                       axis=1)[:, 0]
+            tok = jnp.where(spec_mask, last, tok)
+            remaining = remaining - e
+            spec_sampled = spec_mask & (temp > jnp.float32(0.0))
+            draws = draws + jnp.where(
+                spec_sampled,
+                jnp.int32(spec_lib.accept_draw_events(k)), 0)
+            return (caches, tok, remaining, draws, dtoks, dact, emit, e, m)
 
         # Un-jitted handle kept for trace-only introspection
         # (decode_dispatch_count): jax.make_jaxpr stages the step without
@@ -533,6 +705,11 @@ class ServeEngine(_DeferredErrors):
         # on a mesh engine — dispatch counts are a per-device property of
         # the kernels, not of the collectives around them.
         self._decode_chunk_fn = decode_chunk_fn
+        # Speculative rounds run unsharded only (submit rejects spec on a
+        # mesh engine with a clean error).
+        self._spec_round = jax.jit(
+            spec_round_fn,
+            static_argnames=("k", "draft_groups", "verify_groups"))
         if self.mesh is None:
             self._prefill_slot = jax.jit(prefill_slot,
                                          static_argnames=("tier",))
@@ -622,45 +799,72 @@ class ServeEngine(_DeferredErrors):
 
         def sharded_prefill(params: Any, caches: Any, slot: Any,
                             tokens: Any, length: Any, kv_code: Any,
+                            key: Any, temp: Any, topk: Any,
                             tier: Optional[str] = None) -> Tuple[Any, Any]:
             fp = tuple(jax.tree.leaves(params))
             fc = tuple(jax.tree.leaves(caches))
 
             def body(fp: Any, fc: Any, slot: Any, tokens: Any, length: Any,
-                     kv_code: Any) -> Tuple[Any, Any]:
+                     kv_code: Any, key: Any, temp: Any,
+                     topk: Any) -> Tuple[Any, Any]:
                 tok, out_c = prefill_slot(
                     unflatten(p_def, fp), unflatten(c_def, fc), slot,
-                    tokens, length, kv_code, tier=tier, tp=tp)
+                    tokens, length, kv_code, key, temp, topk, tier=tier,
+                    tp=tp)
                 return tok, tuple(jax.tree.leaves(out_c))
 
             tok, fc2 = shard_map(
                 body, mesh=mesh,
-                in_specs=(p_specs, c_specs, rep, rep, rep, rep),
+                in_specs=(p_specs, c_specs, rep, rep, rep, rep, rep, rep,
+                          rep),
                 out_specs=(rep, c_specs), check_vma=False)(
-                    fp, fc, slot, tokens, length, kv_code)
+                    fp, fc, slot, tokens, length, kv_code, key, temp, topk)
             return tok, unflatten(c_def, fc2)
 
         def sharded_decode(params: Any, caches: Any, tok: Any,
                            remaining: Any, perm: Any, n_steps: int,
                            tier: Optional[str] = None,
-                           groups: Optional[GroupLayout] = None) -> Any:
+                           groups: Optional[GroupLayout] = None,
+                           sampling: Optional[Tuple[Any, Any, Any, Any]]
+                           = None) -> Any:
             fp = tuple(jax.tree.leaves(params))
             fc = tuple(jax.tree.leaves(caches))
 
-            def body(fp: Any, fc: Any, tok: Any, remaining: Any,
-                     perm: Any) -> Any:
-                out_c, tok2, rem2, toks, act = decode_chunk_fn(
-                    unflatten(p_def, fp), unflatten(c_def, fc), tok,
-                    remaining, perm, n_steps, tier, groups, tp=tp)
-                return (tuple(jax.tree.leaves(out_c)), tok2, rem2, toks,
-                        act)
+            if sampling is None:        # legacy trace (lowering callers)
+                def body(fp: Any, fc: Any, tok: Any, remaining: Any,
+                         perm: Any) -> Any:
+                    out_c, tok2, rem2, toks, act = decode_chunk_fn(
+                        unflatten(p_def, fp), unflatten(c_def, fc), tok,
+                        remaining, perm, n_steps, tier, groups, tp=tp)
+                    return (tuple(jax.tree.leaves(out_c)), tok2, rem2,
+                            toks, act)
 
-            fc2, tok2, rem2, toks, act = shard_map(
-                body, mesh=mesh,
-                in_specs=(p_specs, c_specs, rep, rep, rep),
-                out_specs=(c_specs, rep, rep, rep, rep),
-                check_vma=False)(fp, fc, tok, remaining, perm)
-            return unflatten(c_def, fc2), tok2, rem2, toks, act
+                fc2, tok2, rem2, toks, act = shard_map(
+                    body, mesh=mesh,
+                    in_specs=(p_specs, c_specs, rep, rep, rep),
+                    out_specs=(c_specs, rep, rep, rep, rep),
+                    check_vma=False)(fp, fc, tok, remaining, perm)
+                return unflatten(c_def, fc2), tok2, rem2, toks, act
+
+            # Sampling state is replicated (a single ``rep`` prefix-spec
+            # covers the whole tuple): every device computes the identical
+            # threefry draws, so the sampled stream is mesh-width
+            # independent by construction.
+            def sbody(fp: Any, fc: Any, tok: Any, remaining: Any,
+                      perm: Any, sampling: Any) -> Any:
+                out_c, tok2, rem2, draws, toks, act = decode_chunk_fn(
+                    unflatten(p_def, fp), unflatten(c_def, fc), tok,
+                    remaining, perm, n_steps, tier, groups, tp=tp,
+                    sampling=sampling)
+                return (tuple(jax.tree.leaves(out_c)), tok2, rem2, draws,
+                        toks, act)
+
+            fc2, tok2, rem2, draws, toks, act = shard_map(
+                sbody, mesh=mesh,
+                in_specs=(p_specs, c_specs, rep, rep, rep, rep),
+                out_specs=(c_specs, rep, rep, rep, rep, rep),
+                check_vma=False)(fp, fc, tok, remaining, perm, sampling)
+            return unflatten(c_def, fc2), tok2, rem2, draws, toks, act
 
         def sharded_migrate(caches: Any, slot: Any, code: Any) -> Any:
             fc = tuple(jax.tree.leaves(caches))
@@ -780,6 +984,31 @@ class ServeEngine(_DeferredErrors):
                     f"engine serves {sorted(self.schedule.tiers)}")
             request = dataclasses.replace(
                 request, tier=request.tier or self.schedule.default_tier)
+        if request.sampling is not None:
+            request.sampling.validate()
+        if request.spec is not None:
+            spec = request.spec
+            spec.validate()
+            if self.schedule is None:
+                raise ValueError(
+                    f"request {request.uid}: speculative decoding needs an "
+                    "engine with a PrecisionSchedule (the draft tier is a "
+                    "plane prefix of the superplane store)")
+            if spec.draft_tier not in self.schedule.tiers:
+                raise ValueError(
+                    f"request {request.uid}: unknown draft tier "
+                    f"{spec.draft_tier!r}; engine serves "
+                    f"{sorted(self.schedule.tiers)}")
+            if not self.mixed_tiers:
+                raise ValueError(
+                    f"request {request.uid}: speculative decoding needs "
+                    "mixed_tiers=True (draft rows are retagged in the "
+                    "decode group layout)")
+            if self.mesh is not None:
+                raise ValueError(
+                    f"request {request.uid}: speculative decoding is not "
+                    "supported on a mesh engine; submit without spec or "
+                    "use an unsharded engine")
         self._seen_uids.add(request.uid)
         handle = RequestHandle(request, self, submitted_at=self.clock)
         self.handles[request.uid] = handle
@@ -904,7 +1133,8 @@ class ServeEngine(_DeferredErrors):
         sus = SuspendedState(
             request=state.request, tokens=list(state.tokens),
             remaining=int(state.remaining),
-            last_token=int(self._tok[slot]), cache=host, nbytes=nbytes)
+            last_token=int(self._tok[slot]), cache=host, nbytes=nbytes,
+            draws=int(self._draws[slot]))
         if self._spill_dir is not None:
             sus = self._spill(sus)
         self._suspended[uid] = sus
@@ -958,11 +1188,29 @@ class ServeEngine(_DeferredErrors):
         state.remaining = sus.remaining
         self._tok[slot] = sus.last_token
         self._remaining[slot] = sus.remaining
+        self._load_sampling_state(slot, req, draws=sus.draws)
+        self._slice_start[slot] = self.clock
         pol = self.scheduler.policy
         if isinstance(pol, SLOPolicy):
             pol.remaining_tokens.pop(req.uid, None)
         self.handles[req.uid]._mark_admitted(slot, self.clock)
         self.stats.resumes += 1
+
+    def _load_sampling_state(self, slot: int, req: Request, *,
+                             draws: int) -> None:
+        """Load one slot's host-mirrored sampling state from its request
+        (admission and resume share this): the raw request key, the draw
+        counter (0 at fresh admission, the snapshot's at resume — the
+        stream continues exactly where it stopped), temperature and
+        top-k.  Greedy requests (no sampling / temperature 0) keep the
+        all-zero state and never consume randomness."""
+        sp = req.sampling
+        seed = sp.seed if sp is not None else 0
+        self._key[slot] = sampling_lib.request_key(seed)
+        self._temp[slot] = np.float32(sp.temperature if sp is not None
+                                      else 0.0)
+        self._topk[slot] = sp.top_k if sp is not None else 0
+        self._draws[slot] = draws
 
     def _slot_template(self) -> Any:
         """Shape/dtype skeleton of one slot's cache slice (restore target
@@ -1045,8 +1293,8 @@ class ServeEngine(_DeferredErrors):
         padded[0, :plen] = prompt
         return padded, plen
 
-    def _emit_token(self, state: Any, token: int,
-                    tier: Optional[str]) -> TokenEvent:
+    def _emit_token(self, state: Any, token: int, tier: Optional[str],
+                    speculative: bool = False) -> TokenEvent:
         """Record one emitted token on slot state + handle; returns the
         event.  ``final`` fires on the request's last owed token and flips
         its handle to FINISHED.
@@ -1054,13 +1302,18 @@ class ServeEngine(_DeferredErrors):
         ``tier`` is the tier the token was DECODED at (snapshotted at
         dispatch): a ``set_tier`` issued from an on_token callback
         mid-round must not relabel the round's remaining, already-computed
-        tokens.  A callback that raises is deferred to the end of the
-        round (``_raise_deferred``) so slot bookkeeping stays in sync with
-        the device state."""
+        tokens.  ``speculative`` marks tokens emitted by a speculative
+        round (accepted drafts + corrections — all verified at ``tier``).
+        A callback that raises is deferred to the end of the round
+        (``_raise_deferred``) so slot bookkeeping stays in sync with the
+        device state."""
         index = len(state.tokens)
         state.emit(token)
+        sp = state.request.sampling
         event = TokenEvent(uid=state.uid, token=token, index=index,
-                           tier=tier, final=state.done)
+                           tier=tier, final=state.done,
+                           sampled=sp is not None and sp.temperature > 0.0,
+                           speculative=speculative)
         self.handles[state.uid]._push(event, self.clock,
                                       defer=self._defer_error)
         return event
@@ -1102,13 +1355,20 @@ class ServeEngine(_DeferredErrors):
             padded, plen = self._bucket_pad(np.asarray(req.prompt))
             kv_code = self.schedule.kv_code_for(req.tier) \
                 if self._mixed_kv else 0
+            self._load_sampling_state(slot, req, draws=0)
             tok, self.arena.caches = self._prefill_slot(
                 self.params, self.arena.caches, jnp.int32(slot),
                 jnp.asarray(padded), jnp.int32(plen), jnp.int32(kv_code),
-                tier=req.tier)
+                jnp.asarray(self._key[slot]),
+                jnp.float32(self._temp[slot]),
+                jnp.int32(self._topk[slot]), tier=req.tier)
             self.arena.tiers[slot] = req.tier
             self.stats.prefills += 1
             self.stats.prefill_tokens += plen
+            # The first token was draw event 0 (sampled rows only).
+            if self._temp[slot] > 0.0:
+                self._draws[slot] = 1
+            self._slice_start[slot] = self.clock
             first = int(tok)
             state = self.scheduler.slots[slot]
             assert state is not None
@@ -1144,7 +1404,8 @@ class ServeEngine(_DeferredErrors):
         for slot in self.scheduler.release_done():
             self.arena.tiers[slot] = None
 
-    def _group_layout(self) -> Tuple[GroupLayout, npt.NDArray[np.int32]]:
+    def _group_layout(self, tiers: Optional[Sequence[Optional[str]]] = None
+                      ) -> Tuple[GroupLayout, npt.NDArray[np.int32]]:
         """Derive the per-step mixed-tier layout from the slot tier tags.
 
         Returns ``(groups, perm)``: ``groups`` is the jit-STATIC tuple of
@@ -1154,13 +1415,19 @@ class ServeEngine(_DeferredErrors):
         the set of tier multisets over ``max_batch`` slots, not the set of
         slot assignments.
 
+        ``tiers`` overrides the arena's tier vector (same length) — the
+        speculative draft phase derives its layout from a copy with the
+        spec slots retagged to their draft tiers.
+
         Derivations are memoized on the slot-tier vector
         (``EngineStats.layout_cache_hits`` / ``layout_cache_misses``): the
         steady state of a serving loop repeats a handful of layouts, so the
         per-step host work collapses to one dict lookup."""
         schedule = self.schedule
         assert schedule is not None
-        cache_key = tuple(self.arena.tiers)
+        if tiers is None:
+            tiers = self.arena.tiers
+        cache_key = tuple(tiers)
         cached = self._layout_cache.get(cache_key)
         if cached is not None:
             self.stats.layout_cache_hits += 1
@@ -1168,8 +1435,7 @@ class ServeEngine(_DeferredErrors):
         self.stats.layout_cache_misses += 1
         rank = {t: i for i, t in enumerate(schedule.tier_names)}
         default = schedule.default_tier
-        slot_tiers = [t if t is not None else default
-                      for t in self.arena.tiers]
+        slot_tiers = [t if t is not None else default for t in tiers]
         order = sorted(range(self.max_batch),
                        key=lambda s: (rank[slot_tiers[s]], s))
         groups: List[List[Any]] = []
@@ -1204,12 +1470,46 @@ class ServeEngine(_DeferredErrors):
                 if self._active_tier is not None:  # keep across idle steps
                     self._last_tier = self._active_tier
                 self._active_tier = None           # batch drained: re-tier
+        self._time_slice_preempt()
         self._policy_preempt()
         self._in_round = True
         try:
             return self._step_round()
         finally:
             self._in_round = False
+
+    def _time_slice_preempt(self) -> None:
+        """Time-slice fairness (``SLOPolicy(time_slice=N)``): between
+        rounds, voluntarily preempt best-effort (deadline-free) RUNNING
+        slots whose current slice has run at least N scheduler ticks while
+        other requests wait.  Victims re-enter the queue aged as if
+        submitted NOW (scheduler-side only — the handle keeps its true
+        ``submitted_at``, so ``queue_wait`` semantics are untouched), so
+        the waiting requests they yielded to win the FIFO/age tie-break
+        and a two-request ping-pong cannot livelock the batch.  At most
+        ``len(waiting)`` victims per round: slices never free more slots
+        than there is demand for."""
+        pol = self.scheduler.policy
+        if not isinstance(pol, SLOPolicy) or pol.time_slice is None:
+            return
+        n_waiting = len(self.scheduler.waiting)
+        if n_waiting == 0:
+            return
+        expired = [(self._slice_start.get(slot, self.clock), state.uid)
+                   for slot, state in self.scheduler.occupied()
+                   if state.request.deadline is None
+                   and self.clock - self._slice_start.get(slot, self.clock)
+                   >= pol.time_slice]
+        expired.sort()                     # oldest slice first
+        for _, uid in expired[:n_waiting]:
+            self.preempt(uid)
+            self.scheduler.submitted_at[uid] = self.clock
+            self.stats.time_slice_preemptions += 1
+
+    def _sampling_args(self) -> Tuple[Any, Any, Any, Any]:
+        """The traced sampling-state tuple every decode dispatch takes."""
+        return (jnp.asarray(self._key), jnp.asarray(self._draws),
+                jnp.asarray(self._temp), jnp.asarray(self._topk))
 
     def _step_round(self) -> List[TokenEvent]:
         """The round body (see :meth:`step`): admit, decode, account."""
@@ -1219,6 +1519,8 @@ class ServeEngine(_DeferredErrors):
         if not occupied:
             self._raise_deferred()
             return events
+        if any(s.request.spec is not None for _, s in occupied):
+            return self._spec_dispatch(occupied, events)
         # Trim the chunk so a tail of all-finished steps is never dispatched
         # (keyed per distinct length: at most decode_chunk jit entries).
         n_steps = int(min(self.decode_chunk,
@@ -1234,14 +1536,16 @@ class ServeEngine(_DeferredErrors):
         else:
             groups, perm = None, np.zeros((self.max_batch,), np.int32)
             tier = self._active_tier
-        (self.arena.caches, tok, remaining, toks, actives) = \
+        (self.arena.caches, tok, remaining, draws, toks, actives) = \
             self._decode_chunk(self.params, self.arena.caches,
                                jnp.asarray(self._tok),
                                jnp.asarray(self._remaining),
                                jnp.asarray(perm), n_steps=n_steps,
-                               tier=tier, groups=groups)
+                               tier=tier, groups=groups,
+                               sampling=self._sampling_args())
         self._tok = np.array(tok)            # copies: host arrays stay writable
         self._remaining = np.array(remaining)
+        self._draws = np.array(draws)
         toks = np.asarray(toks)                   # [n_steps, B]
         actives = np.asarray(actives)
         self.stats.decode_chunks += 1
@@ -1277,6 +1581,99 @@ class ServeEngine(_DeferredErrors):
                 if actives[s, slot]:
                     events.append(self._emit_token(state, int(toks[s, slot]),
                                                    etier[slot]))
+        self._release_done()
+        self._raise_deferred()
+        return events
+
+    def _spec_dispatch(self, occupied: List[Tuple[int, Any]],
+                       events: List[TokenEvent]) -> List[TokenEvent]:
+        """One speculative scheduling round (any occupied slot with
+        ``Request.spec`` routes the whole round here).
+
+        Host side of ``spec_round_fn``: derive the draft layout (spec
+        slots retagged to their draft tiers — zero weight re-preparation,
+        the draft model is a plane prefix of the store), run the jitted
+        round (k draft steps + ONE verify window forward + rollback), then
+        emit — plain slots' draft-phase tokens step-major first (for them
+        those were ordinary decode steps), then each spec slot's accepted
+        window.  The scheduler clock advances k+1 ticks (k draft + 1
+        verify).  Slots with different ``k`` share the round at the
+        largest ``k`` (drafting deeper is harmless; acceptance is exact
+        either way)."""
+        spec_states = [(slot, s) for slot, s in occupied
+                       if s.request.spec is not None]
+        k = max(s.request.spec.k for _, s in spec_states)
+        width = k + 1
+        spec_mask = np.zeros((self.max_batch,), bool)
+        draft_tiers = list(self.arena.tiers)
+        for slot, s in spec_states:
+            spec_mask[slot] = True
+            draft_tiers[slot] = s.request.spec.draft_tier
+        draft_groups, perm_d = self._group_layout(tiers=draft_tiers)
+        verify_groups, perm_v = self._group_layout()
+        (self.arena.caches, tok, remaining, draws, dtoks, dact, win, e,
+         m) = self._spec_round(
+            self.params, self.arena.caches, jnp.asarray(self._tok),
+            jnp.asarray(self._remaining), jnp.asarray(perm_d),
+            jnp.asarray(perm_v), jnp.asarray(spec_mask),
+            self._sampling_args(), k=k, draft_groups=draft_groups,
+            verify_groups=verify_groups)
+        self._tok = np.array(tok)
+        self._remaining = np.array(remaining)
+        self._draws = np.array(draws)
+        dtoks = np.asarray(dtoks)                       # [k, B]
+        dact = np.asarray(dact)                         # [k, B]
+        win = np.asarray(win)                           # [B, k+1]
+        e = np.asarray(e)
+        m = np.asarray(m)
+        n_spec = len(spec_states)
+        self.stats.decode_chunks += 1
+        self.stats.decode_steps += width
+        self.stats.spec_rounds += 1
+        self.stats.spec_draft_steps += k
+        self.stats.spec_verify_steps += 1
+        self.stats.spec_drafted += k * n_spec
+        self.stats.spec_accepted += int(
+            np.minimum(m[spec_mask], e[spec_mask]).sum())
+        self.stats.spec_emitted += int(e[spec_mask].sum())
+        # Slot-step accounting identity (decode_slot_steps +
+        # decode_idle_slot_steps == decode_steps * max_batch): spec slots
+        # are busy all k+1 steps, plain slots their active draft steps.
+        busy = int(dact.sum()) + width * n_spec
+        self.stats.decode_slot_steps += busy
+        self.stats.decode_idle_slot_steps += width * self.max_batch - busy
+        by_tier = self.stats.decode_steps_by_tier
+        draft_occ = {draft_tiers[slot] for slot, _ in occupied}
+        verify_occ = {self.arena.tiers[slot] for slot, _ in occupied}
+        for t in draft_occ:
+            assert t is not None
+            by_tier[t] = by_tier.get(t, 0) + k
+        for t in verify_occ:
+            assert t is not None
+            by_tier[t] = by_tier.get(t, 0) + 1
+        self.stats.mixed_tier_chunks += len(draft_occ | verify_occ) > 1
+        tk = self.stats.tokens_by_tier
+        for slot, _ in occupied:
+            t = self.arena.tiers[slot]
+            assert t is not None
+            n = int(dact[:, slot].sum())
+            if spec_mask[slot]:
+                n += int(e[slot])
+            if n:
+                tk[t] = tk.get(t, 0) + n
+        # Emission: plain slots step-major through the draft phase, then
+        # each spec slot's verified window (decoded AT the verify tier).
+        etier = {slot: self.arena.tiers[slot] for slot, _ in occupied}
+        for s_i in range(k):
+            for slot, state in occupied:
+                if dact[s_i, slot]:
+                    events.append(self._emit_token(
+                        state, int(dtoks[s_i, slot]), etier[slot]))
+        for slot, state in spec_states:
+            for j in range(int(e[slot])):
+                events.append(self._emit_token(
+                    state, int(win[slot, j]), etier[slot],
+                    speculative=True))
         self._release_done()
         self._raise_deferred()
         return events
@@ -1317,6 +1714,18 @@ class ServeEngine(_DeferredErrors):
         tokens = self.scheduler.finished.pop(uid, None)
         if tokens is None:
             tokens = list(handle.tokens)     # SHED: whatever was streamed
+        # SHED requests may still own suspended-state residue (a request
+        # cancelled while SUSPENDED frees it in cancel(); this is the
+        # belt-and-braces path so retiring EVERY terminal request provably
+        # leaves the engine empty — the fuzz harness asserts exactly that).
+        sus = self._suspended.pop(uid, None)
+        if sus is not None and sus.spill_step is not None:
+            assert self._spiller is not None and self._spill_dir is not None
+            self._spiller.wait()
+            checkpoint_lib.remove(self._spill_dir, sus.spill_step)
+        pol = self.scheduler.policy
+        if isinstance(pol, SLOPolicy):
+            pol.remaining_tokens.pop(uid, None)
         del self.handles[uid]
         self._seen_uids.discard(uid)
         return tokens
@@ -1411,6 +1820,18 @@ class BatchServeEngine(_DeferredErrors):
         submission order, ``max_batch`` at a time, whenever ``step`` finds
         no active batch."""
         _validate_request(request, self.max_len, self._seen_uids)
+        if request.spec is not None:
+            raise ValueError(
+                f"request {request.uid}: speculative decoding needs "
+                "ServeEngine (the reference baseline has no draft/verify "
+                "dispatch)")
+        if request.sampling is not None:
+            request.sampling.validate()
+            if request.sampling.temperature > 0.0:
+                raise ValueError(
+                    f"request {request.uid}: temperature sampling needs "
+                    "ServeEngine (the reference baseline decodes greedily); "
+                    "temperature=0.0 SamplingParams are accepted as greedy")
         self._seen_uids.add(request.uid)
         handle = RequestHandle(request, self, submitted_at=self.clock)
         self.handles[request.uid] = handle

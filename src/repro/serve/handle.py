@@ -55,13 +55,19 @@ class TokenEvent:
     FINISHED the moment this event is pushed).  ``tier`` is the precision
     tier the token was decoded at (None on untiered engines) — under
     mid-stream migration, successive events of one request may carry
-    different tiers."""
+    different tiers.  ``sampled`` is True when the token came from the
+    request's temperature/top-k sampler rather than greedy argmax;
+    ``speculative`` marks tokens emitted by a speculative round (accepted
+    drafts and correction tokens — all verified at ``tier``, never the
+    draft tier)."""
 
     uid: int
     token: int
     index: int
     tier: Optional[str]
     final: bool
+    sampled: bool = False
+    speculative: bool = False
 
 
 class _HandleEngine(Protocol):

@@ -7,6 +7,9 @@ from typing import Optional
 import numpy as np
 import numpy.typing as npt
 
+from repro.spec.sampling import SamplingParams
+from repro.spec.speculate import SpecConfig
+
 
 @dataclasses.dataclass
 class Request:
@@ -33,7 +36,23 @@ class Request:
     ``tenant_weights`` ages a weighted tenant's queued requests faster
     (weighted slack), so one tenant's burst cannot starve another's.
     None (or an unlisted name) means weight 1.0 — plain unweighted
-    scheduling."""
+    scheduling.
+
+    ``sampling`` selects temperature / top-k sampling for this request
+    (:class:`~repro.spec.sampling.SamplingParams`).  None (or
+    ``temperature == 0``) is exact greedy — bit-identical to the argmax
+    path.  Sampled streams are deterministic functions of the request's
+    seed alone: batch composition, chunking, and mesh width do not move
+    them.
+
+    ``spec`` turns on self-speculative decoding
+    (:class:`~repro.spec.speculate.SpecConfig`): the slot drafts ``k``
+    tokens per round at ``spec.draft_tier`` (a plane prefix of the same
+    preloaded weights) and verifies the window at the request's own tier
+    in one batched forward.  Greedy speculative output is token-identical
+    to non-speculative decoding at the verify tier; sampled speculative
+    output preserves the sampling distribution (rejection sampling) but
+    follows a different draw path than a non-speculative run."""
 
     uid: int
     prompt: npt.NDArray[np.int32]  # [S] int32
@@ -42,3 +61,5 @@ class Request:
     tier: Optional[str] = None     # precision tier name (see class docstring)
     deadline: Optional[float] = None   # SLO budget in scheduler-clock ticks
     tenant: Optional[str] = None   # traffic source (per-tenant fair slack)
+    sampling: Optional[SamplingParams] = None   # None = greedy (argmax)
+    spec: Optional[SpecConfig] = None   # None = plain decoding

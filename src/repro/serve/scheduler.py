@@ -160,6 +160,15 @@ class SLOPolicy:
       over the slots) and answers ``"admit"``, ``"shed"``, or (with
       ``auto_tier``) a faster tier name to downtier to.  Best-effort
       requests are always admitted — they wait instead of being refused.
+    * ``time_slice=N`` (scheduler ticks, >= 1) — time-slice fairness for
+      best-effort (deadline-free) requests: the engine voluntarily
+      preempts a best-effort RUNNING slot whose current slice has run N
+      or more ticks whenever other requests are waiting, so a stream of
+      long best-effort requests round-robins instead of holding slots
+      until completion.  Victims are re-aged as freshly submitted on the
+      scheduler side only (``queue_wait`` semantics untouched), which
+      sends them to the back of the FIFO tie-break.  Deadlined requests
+      are never sliced — their urgency is already priced by slack.
     * ``tenant_weights`` (tenant name -> weight >= 1.0) — per-tenant
       fairness: a weighted tenant's queued requests age faster
       (``weighted_slack`` subtracts ``(weight-1) * queue_age``), so its
@@ -180,7 +189,8 @@ class SLOPolicy:
                  preempt: bool = False,
                  preempt_slack: float = 0.0,
                  shed: bool = False,
-                 tenant_weights: Optional[Mapping[str, float]] = None
+                 tenant_weights: Optional[Mapping[str, float]] = None,
+                 time_slice: Optional[int] = None
                  ) -> None:
         if tier_costs is None and schedule is not None:
             from repro.hwmodel.energy import relative_tier_costs
@@ -196,6 +206,11 @@ class SLOPolicy:
             if w < 1.0:
                 raise ValueError(f"tenant {tenant!r}: weight {w} < 1.0 "
                                  "(weights only ever ACCELERATE aging)")
+        if time_slice is not None and int(time_slice) < 1:
+            raise ValueError(f"time_slice must be >= 1 scheduler tick, got "
+                             f"{time_slice}")
+        self.time_slice: Optional[int] = \
+            None if time_slice is None else int(time_slice)
         # uid -> decode tokens still owed; stamped by the engine when it
         # suspends a request, cleared at resume/cancel.  Lets slack and
         # service estimates price partially-served requests correctly.

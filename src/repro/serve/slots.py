@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import KVCache
+from repro.models.ssm import SSMCache
 
 SLOT_AXIS = 1   # cache leaves are [n_periods, B, ...]
 
@@ -56,6 +57,76 @@ def slot_reset(caches: Any, slot: Any) -> Any:
     zero = jax.tree.map(lambda a: jnp.zeros_like(
         jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=SLOT_AXIS)), caches)
     return slot_write(caches, zero, slot)
+
+
+def merge_slots(updated: Any, original: Any, keep_original: Any) -> Any:
+    """Per-slot cache merge: the masked twin of :func:`slot_write`.
+
+    Rows where ``keep_original[b]`` is True come back with their ORIGINAL
+    state on every leaf; other rows keep ``updated``.  This is the
+    draft-discard half of speculative rollback: after the draft phase the
+    speculative slots' low-tier KV/SSM writes are dropped wholesale
+    (their lanes rewind to the pre-round state) while the plain slots in
+    the same batch keep their real decode progress.  Both trees must be
+    the arena layout (every leaf ``[n_periods, B, ...]``)."""
+    batch = keep_original.shape[0]
+
+    def one(new: Any, old: Any) -> Any:
+        shape = (1, batch) + (1,) * (new.ndim - 2)
+        return jnp.where(keep_original.reshape(shape), old, new)
+
+    return jax.tree.map(one, updated, original)
+
+
+def truncate_kv_lengths(caches: Any, rollback: Any, mask: Any) -> Any:
+    """Masked KV length truncation: the masked-truncate twin of
+    :func:`slot_view`.
+
+    Shortens slot ``b``'s fill point by ``rollback[b]`` positions where
+    ``mask[b]`` is True (traced-ok), leaving the K/V rows themselves in
+    place: entries past the new length are invisible to
+    ``decode_attention`` (its validity mask is ``pos < length``) and are
+    overwritten by the next appends, so a length rewind IS the rollback.
+    Used after the speculative verify forward to drop the KV of rejected
+    draft positions.  No-op for SSM caches (their rollback is a state
+    re-selection, :func:`select_verify_step`)."""
+
+    def one(c: Any) -> Any:
+        if isinstance(c, KVCache):
+            delta = jnp.where(mask, rollback, 0).astype(c.length.dtype)
+            shape = (1,) * (c.length.ndim - 1) + (-1,)
+            return dataclasses.replace(
+                c, length=jnp.maximum(c.length - delta.reshape(shape), 0))
+        return c
+
+    return jax.tree.map(one, caches,
+                        is_leaf=lambda c: isinstance(c, (KVCache, SSMCache)))
+
+
+def select_verify_step(caches: Any, step_index: Any) -> Any:
+    """Collapse verify-stacked SSM caches to one step per slot.
+
+    The multi-token verify forward returns SSM caches with a per-step
+    window axis (leaves ``[n_periods, W, B, ...]`` — one conv/state
+    snapshot per window position, because SSM state can only roll back
+    by re-selection, not by a length rewind).  This picks snapshot
+    ``step_index[b]`` (traced-ok int32 ``[B]``) for every slot and
+    restores the arena layout ``[n_periods, B, ...]``.  Slots that were
+    inactive during verify carry their pre-round state at every
+    snapshot, so any index is correct for them."""
+
+    def one(c: Any) -> Any:
+        if isinstance(c, SSMCache):
+            def sel(a: Any) -> Any:
+                idx = step_index.reshape((1, 1, -1) + (1,) * (a.ndim - 3))
+                return jnp.take_along_axis(a, idx.astype(jnp.int32),
+                                           axis=1)[:, 0]
+            return dataclasses.replace(c, conv=sel(c.conv),
+                                       state=sel(c.state))
+        return c
+
+    return jax.tree.map(one, caches,
+                        is_leaf=lambda c: isinstance(c, (KVCache, SSMCache)))
 
 
 def fill_kv_tier(caches: Any, code: Any) -> Any:

@@ -1,0 +1,27 @@
+"""Speculative decoding from the plane prefix.
+
+Two layers:
+
+* :mod:`repro.spec.sampling` — temperature / top-k / greedy token
+  selection with a threaded PRNG key, deterministic across eager/jit and
+  across mesh widths, designed to run INSIDE the jitted decode chunk.
+* :mod:`repro.spec.speculate` — self-speculation: the 2/4-bit plane
+  prefix of the superplane store drafts k tokens, the 8-bit tier
+  verifies the window in one batched forward, and the acceptance rule
+  (exact prefix match for greedy, rejection sampling for sampled mode)
+  decides how many tokens to emit and how far to roll the KV arena back.
+
+Both are pure array modules: the engine integration lives in
+``repro.serve.engine``.
+"""
+from repro.spec.sampling import SamplingParams, sample_tokens, sampling_probs
+from repro.spec.speculate import SpecConfig, accept_counts, correction_tokens
+
+__all__ = [
+    "SamplingParams",
+    "SpecConfig",
+    "accept_counts",
+    "correction_tokens",
+    "sample_tokens",
+    "sampling_probs",
+]

@@ -1,0 +1,170 @@
+"""Sampling inside the jitted decode chunk.
+
+Temperature / top-k / greedy token selection with a threaded PRNG key.
+The serving invariants this module is built around:
+
+* **Deterministic across eager/jit and across mesh widths.**  Every draw
+  derives from the request's own key (``jax.random.PRNGKey(seed)``)
+  folded with a per-slot draw counter and a purpose tag.  Threefry is
+  counter-based, so the sampled stream depends only on
+  ``(seed, draw_index, tag)`` — never on slot assignment, batch
+  composition, chunk boundaries, or the mesh layout (sampling state is
+  replicated on a mesh).  The per-token math is elementwise + argmax,
+  which XLA does not reassociate, so eager and jit agree bitwise.
+* **Greedy is exact.**  Rows with ``temperature == 0`` take
+  ``jnp.argmax`` over the raw logits — the same reduction the
+  pre-sampling engine used — so greedy serving stays token-identical.
+* **Reciprocal-multiply scale math.**  Temperature is applied as an
+  explicit f32 reciprocal multiply (``logits * (1/t)``), the same
+  discipline the fused decode path uses for dequant scales: both eager
+  and jit then run the identical multiply instead of one of them
+  strength-reducing a division.
+
+Draw counters advance once per draw EVENT (not per emitted token): a
+speculative round burns extra accept/residual draws, and a rejected
+round's redraw must see fresh randomness.  Counters only advance for
+rows that actually sample (``temperature > 0`` and active), so a greedy
+request never consumes randomness and a sampled request's stream is a
+pure function of how many tokens it has drawn.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Purpose tags folded into each draw's subkey, so the token draw, the
+# speculative accept draw, and the residual/bonus draw at the same
+# counter value are independent streams.
+TAG_TOKEN = 0
+TAG_ACCEPT = 1
+TAG_RESIDUAL = 2
+
+# Guard value for the temperature reciprocal on greedy rows (their
+# sampled branch is discarded by the final ``where``; the guard only
+# keeps the dead branch finite).
+_MIN_TEMP = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature == 0`` (the default) is exact greedy — bit-identical
+    to the argmax path that predates this module.  ``top_k == 0`` means
+    no top-k restriction.  ``seed`` names the request's private PRNG
+    stream; two requests with the same seed, prompt, and tier sample
+    identical tokens regardless of what else shares the batch.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+def request_key(seed: int) -> np.ndarray:
+    """Host-side raw threefry key for a request seed (uint32 ``[2]``)."""
+    return np.asarray(jax.random.PRNGKey(seed), dtype=np.uint32)
+
+
+def fold_events(keys: jax.Array, draws: jax.Array, tag: int) -> jax.Array:
+    """Per-slot subkey for draw event ``draws[b]`` with purpose ``tag``.
+
+    ``keys``: uint32 ``[B, 2]`` raw request keys; ``draws``: int32
+    ``[B]`` draw counters.  Returns uint32 ``[B, 2]`` subkeys.
+    """
+
+    def one(key: jax.Array, counter: jax.Array) -> jax.Array:
+        return jax.random.fold_in(jax.random.fold_in(key, counter), tag)
+
+    return jax.vmap(one)(keys, draws)
+
+
+def scale_logits(logits: jax.Array, temperature: jax.Array) -> jax.Array:
+    """Temperature via explicit f32 reciprocal multiply (``x * (1/t)``)."""
+    x = logits.astype(jnp.float32)
+    t = jnp.maximum(temperature.astype(jnp.float32), jnp.float32(_MIN_TEMP))
+    inv_t = jnp.float32(1.0) / t
+    return x * inv_t[:, None]
+
+
+def mask_top_k(scaled: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Keep each row's ``top_k[b]`` largest logits, others to ``-inf``.
+
+    ``top_k[b] <= 0`` keeps the whole row.  Ties at the k-th value are
+    all kept (the mask is a value threshold, not an index cutoff).
+    """
+    vocab = scaled.shape[-1]
+    k_eff = jnp.where(top_k > 0, top_k, vocab).astype(jnp.int32)
+    k_eff = jnp.clip(k_eff, 1, vocab)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    return jnp.where(scaled < thresh, -jnp.inf, scaled)
+
+
+def gumbel_argmax(keys: jax.Array, logits: jax.Array) -> jax.Array:
+    """One categorical draw per row via the Gumbel-max trick.
+
+    ``keys``: uint32 ``[B, 2]`` subkeys (one per row), ``logits``: f32
+    ``[B, V]`` (may contain ``-inf``).  Elementwise + argmax only, so
+    eager and jit agree bitwise.
+    """
+
+    def one(key: jax.Array, row: jax.Array) -> jax.Array:
+        u = jax.random.uniform(key, row.shape, jnp.float32,
+                               minval=float(np.finfo(np.float32).tiny),
+                               maxval=1.0)
+        return jnp.argmax(row - jnp.log(-jnp.log(u))).astype(jnp.int32)
+
+    return jax.vmap(one)(keys, logits)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, draws: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array,
+                  active: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Select one token per row; the decode-scan selection step.
+
+    ``logits``: ``[B, V]`` (any float dtype); ``keys``: uint32
+    ``[B, 2]``; ``draws``: int32 ``[B]`` draw counters; ``temperature``:
+    f32 ``[B]``; ``top_k``: int32 ``[B]``; ``active``: optional bool
+    ``[B]`` — inactive rows neither sample nor advance their counter.
+
+    Returns ``(tokens [B] int32, new_draws [B] int32)``.  Rows with
+    ``temperature == 0`` return the raw-logits argmax exactly.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled_rows = temperature > jnp.float32(0.0)
+    if active is not None:
+        sampled_rows = sampled_rows & active
+    masked = mask_top_k(scale_logits(logits, temperature), top_k)
+    drawn = gumbel_argmax(fold_events(keys, draws, TAG_TOKEN), masked)
+    tokens = jnp.where(sampled_rows, drawn, greedy)
+    return tokens, draws + sampled_rows.astype(jnp.int32)
+
+
+def sampling_probs(logits: jax.Array, temperature: jax.Array,
+                   top_k: jax.Array) -> jax.Array:
+    """The post-temperature/top-k next-token distribution, f32 ``[B, V]``.
+
+    Rows with ``temperature == 0`` are a point mass at the raw-logits
+    argmax, so greedy requests flow through the speculative acceptance
+    rule as the degenerate (deterministic) case of rejection sampling.
+    """
+    vocab = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+    masked = mask_top_k(scale_logits(logits, temperature), top_k)
+    probs = jax.nn.softmax(masked, axis=-1)
+    point = jax.nn.one_hot(greedy, vocab, dtype=jnp.float32)
+    sampled_rows = (temperature > jnp.float32(0.0))[:, None]
+    return jnp.where(sampled_rows, probs, point)

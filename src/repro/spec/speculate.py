@@ -1,0 +1,160 @@
+"""Self-speculative decoding: configuration + acceptance logic.
+
+The superplane store's MSB-first decomposition makes a low-precision
+draft model a free LSB-truncation of the 8-bit weights already in
+memory, so draft and verify are the SAME engine at two plane-prefix
+depths.  A speculative round is:
+
+1. **Draft** — k chained single-token decode steps at the draft tier
+   (the existing grouped GEMM runs draft rows and plain rows in one
+   mixed-tier batch); the draft KV writes are discarded afterwards.
+2. **Verify** — ONE multi-token forward of the (k+1)-token window
+   ``[t0, d1..dk]`` at the verify tier, appending verify-tier KV at the
+   same arena lanes.
+3. **Accept** — the functions in this module: leading-prefix acceptance
+   by rejection sampling (``accept_counts``), the correction/bonus token
+   from the residual distribution (``correction_tokens``), and the
+   emitted window (``emission_window``).
+
+Greedy requests flow through the SAME code path as the degenerate case:
+:func:`repro.spec.sampling.sampling_probs` gives them point-mass
+distributions, so the accept draw compares ``u < 1`` (draft matches the
+verify argmax) or ``u < 0`` (it does not), and the residual distribution
+collapses to a point mass at the verify argmax — the emitted window is
+exactly ``argmax(verify_logits)[:, :e]``, token-identical to sequential
+greedy decoding at the verify tier by construction.
+
+Everything here is pure array math on distributions the engine already
+computed; no model calls, no weight preparation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.spec import sampling
+
+_TINY = float(np.finfo(np.float32).tiny)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Per-request speculative-decoding configuration.
+
+    ``draft_tier`` names the schedule tier that drafts (e.g. ``"2/2"``
+    or ``"4/4"`` — a plane prefix of the preloaded store, so drafting
+    needs zero extra weight storage).  ``k`` is the draft depth: each
+    round drafts ``k`` tokens and verifies the ``k+1``-token window in
+    one batched forward.  When slots with different ``k`` share a batch
+    the round runs at the largest ``k`` (drafting deeper than requested
+    is harmless — acceptance is exact either way).
+    """
+
+    draft_tier: str
+    k: int = 4
+
+    def validate(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+
+
+def _per_position_uniform(keys: jax.Array, counters: jax.Array,
+                          tag: int) -> jax.Array:
+    """One uniform draw per (row, position): ``counters`` is ``[B, k]``."""
+    batch, k = counters.shape
+    flat_keys = jnp.repeat(keys, k, axis=0)
+    sub = sampling.fold_events(flat_keys, counters.reshape(-1), tag)
+
+    def one(key: jax.Array) -> jax.Array:
+        return jax.random.uniform(key, (), jnp.float32)
+
+    return jax.vmap(one)(sub).reshape(batch, k)
+
+
+def accept_counts(drafts: jax.Array, draft_probs: jax.Array,
+                  verify_probs: jax.Array, keys: jax.Array,
+                  draws: jax.Array) -> jax.Array:
+    """Leading accepted drafts per row, by rejection sampling.
+
+    ``drafts``: int32 ``[B, k]``; ``draft_probs``: f32 ``[B, k, V]``
+    (each draft step's post-temperature/top-k distribution);
+    ``verify_probs``: f32 ``[B, k+1, V]`` (the verify window's);
+    ``keys``/``draws``: the sampling key state (draw counters are read,
+    not advanced — the caller advances them by ``k`` for sampled rows).
+
+    Position j accepts with probability ``min(1, p_j(d_j) / q_j(d_j))``;
+    the count is the length of the accepted prefix.  For greedy rows the
+    point-mass distributions make this exact prefix match against the
+    verify argmax.
+    """
+    k = drafts.shape[1]
+    p_at_d = jnp.take_along_axis(verify_probs[:, :k], drafts[..., None],
+                                 axis=-1)[..., 0]
+    q_at_d = jnp.take_along_axis(draft_probs, drafts[..., None],
+                                 axis=-1)[..., 0]
+    inv_q = jnp.float32(1.0) / jnp.maximum(q_at_d, jnp.float32(_TINY))
+    ratio = p_at_d * inv_q
+    counters = draws[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    u = _per_position_uniform(keys, counters, sampling.TAG_ACCEPT)
+    accept = u < jnp.minimum(ratio, jnp.float32(1.0))
+    return jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+
+def correction_tokens(draft_probs: jax.Array, verify_probs: jax.Array,
+                      m: jax.Array, keys: jax.Array,
+                      draws: jax.Array) -> jax.Array:
+    """The token emitted at the stop position of each row.
+
+    At the first rejected position (``m < k``) this samples the residual
+    distribution ``normalize(max(p_m - q_m, 0))``; when every draft was
+    accepted (``m == k``) the draft distribution is void and it samples
+    the bonus token from ``p_k`` directly (the zero-padded ``q`` row
+    makes both one expression).  Greedy rows get the verify argmax at
+    the stop position exactly — their residual is a point mass, so the
+    gumbel draw cannot move it.  Returns int32 ``[B]``; the caller
+    advances ``draws`` by one for sampled rows.
+    """
+    q_ext = jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0)))
+    stop = m[:, None, None]
+    p_stop = jnp.take_along_axis(verify_probs, stop, axis=1)[:, 0]
+    q_stop = jnp.take_along_axis(q_ext, stop, axis=1)[:, 0]
+    residual = jnp.maximum(p_stop - q_stop, jnp.float32(0.0))
+    z = jnp.sum(residual, axis=-1, keepdims=True)
+    inv_z = jnp.float32(1.0) / jnp.maximum(z, jnp.float32(_TINY))
+    dist = residual * inv_z
+    sub = sampling.fold_events(keys, draws, sampling.TAG_RESIDUAL)
+    return sampling.gumbel_argmax(sub, jnp.log(dist))
+
+
+def emission_window(drafts: jax.Array, correction: jax.Array,
+                    m: jax.Array) -> jax.Array:
+    """The round's emission candidates, int32 ``[B, k+1]``.
+
+    Positions ``< m`` are the accepted drafts, position ``m`` is the
+    correction/bonus token; later positions are never emitted (the
+    engine takes the first ``e = min(m + 1, remaining)`` tokens, so a
+    budget-capped row emits accepted drafts only).
+    """
+    k = drafts.shape[1]
+    idx = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+    drafts_pad = jnp.pad(drafts, ((0, 0), (0, 1)))
+    return jnp.where(idx < m[:, None], drafts_pad,
+                     jnp.where(idx == m[:, None], correction[:, None], 0))
+
+
+def accept_draw_events(k: int) -> int:
+    """Draw events a sampled row burns per round beyond its k token
+    draws: k accept draws + 1 residual/bonus draw."""
+    return k + 1
+
+
+__all__ = [
+    "SpecConfig",
+    "accept_counts",
+    "accept_draw_events",
+    "correction_tokens",
+    "emission_window",
+]

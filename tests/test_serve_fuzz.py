@@ -1,11 +1,15 @@
 """Property-based serving-invariant fuzz harness.
 
 Random interleavings of the full engine op surface — ``submit`` (tiered /
-deadlined / tenant-tagged), ``step``, QUEUED ``set_tier``, ``preempt``,
-``cancel``, ``retire`` — run against ONE shared warm engine (compiles are
-the whole cost; every interleaving reuses the traced steps), with an
-SLOPolicy that has every overload feature enabled (preemption, shedding,
-tenant weights).  After EVERY op the structural invariants below are
+deadlined / tenant-tagged / speculative), ``step``, QUEUED ``set_tier``,
+``preempt``, ``cancel``, ``retire`` — run against ONE shared warm engine
+(compiles are the whole cost; every interleaving reuses the traced
+steps), with an SLOPolicy that has every overload feature enabled
+(preemption, shedding, tenant weights, time-slice fairness).  Greedy
+speculative requests reuse the plain references directly — the
+draft/verify/rollback round is token-identical to verify-tier decoding
+by construction, so speculation composes with every other op under test
+at zero extra reference cost.  After EVERY op the structural invariants below are
 checked, and at the end of each interleaving the engine is drained,
 streams are compared against precomputed unpressured references, and the
 engine must return to a completely empty state (the leak check).
@@ -47,7 +51,8 @@ from repro.configs import reduced_config
 from repro.core.policy import uniform_schedule
 from repro.models.layers import Runtime
 from repro.models.transformer import LM
-from repro.serve import (Request, RequestStatus, ServeEngine, SLOPolicy)
+from repro.serve import (Request, RequestStatus, ServeEngine, SLOPolicy,
+                         SpecConfig)
 
 N_EXAMPLES = int(os.environ.get("SERVE_FUZZ_EXAMPLES", "200"))
 
@@ -81,7 +86,7 @@ def fuzz_engine():
     rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
                  schedule=sched)
     pol = SLOPolicy(sched, preempt=True, preempt_slack=4.0, shed=True,
-                    tenant_weights={"gold": 2.0})
+                    tenant_weights={"gold": 2.0}, time_slice=6)
     eng = ServeEngine(model, params, rt, max_batch=MAX_BATCH, max_len=64,
                       decode_chunk=2, scheduler_policy=pol)
     rng = np.random.default_rng(1234)
@@ -168,10 +173,17 @@ def run_interleaving(fuzz, seed, n_ops=24):
         counter[0] += 1
         p = int(rng.integers(len(PROFILES)))
         plen, max_new, deadline, tenant = PROFILES[p]
+        # Greedy speculative requests share the plain references: the
+        # verify-tier stream is token-identical by construction, so the
+        # (profile, tier) reference covers them too.  One fixed
+        # (draft_tier, k) keeps the extra jit traces bounded.
+        spec = SpecConfig(draft_tier="4/4", k=2) \
+            if rng.random() < 0.2 else None
         h = eng.submit(Request(uid=uid, prompt=prompts[p],
                                max_new_tokens=max_new,
                                tier=tiers[int(rng.integers(len(tiers)))],
-                               deadline=deadline, tenant=tenant))
+                               deadline=deadline, tenant=tenant,
+                               spec=spec))
         live[uid] = (p, h)
         if h.status is RequestStatus.SHED:
             shed.add(uid)
@@ -232,8 +244,16 @@ def run_interleaving(fuzz, seed, n_ops=24):
 def test_fuzz_seeded_interleavings(fuzz_engine):
     """The CI floor: >= 200 (SERVE_FUZZ_EXAMPLES) deterministic seeded
     interleavings, every op followed by the full invariant check."""
+    eng = fuzz_engine[0]
+    spec0 = eng.stats.spec_rounds
+    slice0 = eng.stats.time_slice_preemptions
     for seed in range(N_EXAMPLES):
         run_interleaving(fuzz_engine, seed)
+    # The op mix must actually have exercised the new machinery: greedy
+    # speculative rounds (verified against the plain references inside
+    # run_interleaving) and time-slice preemptions both fire.
+    assert eng.stats.spec_rounds > spec0
+    assert eng.stats.time_slice_preemptions > slice0
 
 
 def test_fuzz_overload_heavy(fuzz_engine):

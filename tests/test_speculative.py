@@ -1,0 +1,255 @@
+"""Self-speculative decoding (repro.spec.speculate + engine integration).
+
+The headline invariant: a GREEDY speculative request's token stream is
+IDENTICAL to the same request decoded non-speculatively at its verify
+tier — for every draft tier, every draft depth k, and regardless of what
+else shares the batch.  Plus: zero weight re-preparations, sane
+acceptance accounting, strict verify-step savings under full acceptance,
+and deterministic sampled-mode speculation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serve.engine as engine_mod
+from repro.configs import reduced_config
+from repro.core.policy import uniform_schedule
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve import (BatchServeEngine, Request, SamplingParams,
+                         ServeEngine, SpecConfig)
+from repro.spec import speculate
+
+
+# ----------------------------------------------------------- fixtures
+def _setup(arch="granite-3-8b"):
+    cfg = reduced_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule({"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)},
+                             kv_tiers={"8/8": 8, "4/4": 8, "2/2": 8})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", schedule=sched)
+    return cfg, model, params, rt
+
+
+def _engine(model, params, rt, max_batch=3):
+    return ServeEngine(model, params, rt, max_batch=max_batch, max_len=64,
+                       decode_chunk=2)
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab_size, size=4 + i % 3))
+            for i in range(n)]
+
+
+# ------------------------------------------------- pure acceptance math
+def test_accept_counts_greedy_is_prefix_match():
+    v = 11
+    drafts = jnp.asarray([[3, 7, 2], [5, 5, 5]], jnp.int32)
+    # verify point masses: row 0 agrees at positions 0,1 then diverges;
+    # row 1 diverges immediately.
+    vtoks = np.array([[3, 7, 9, 1], [0, 5, 5, 5]])
+    vp = jnp.asarray(np.eye(v, dtype=np.float32)[vtoks])
+    qp = jnp.asarray(np.eye(v, dtype=np.float32)[np.asarray(drafts)])
+    keys = jnp.zeros((2, 2), jnp.uint32)
+    draws = jnp.zeros((2,), jnp.int32)
+    m = speculate.accept_counts(drafts, qp, vp, keys, draws)
+    assert m.tolist() == [2, 0]
+    corr = speculate.correction_tokens(qp, vp, m, keys, draws)
+    # stop-position verify argmax: row 0 position 2 -> 9, row 1 pos 0 -> 0
+    assert corr.tolist() == [9, 0]
+    emit = speculate.emission_window(drafts, corr, m)
+    assert emit[0, :3].tolist() == [3, 7, 9]
+    assert emit[1, :1].tolist() == [0]
+
+
+def test_emission_window_full_acceptance_bonus():
+    drafts = jnp.asarray([[4, 6]], jnp.int32)
+    corr = jnp.asarray([8], jnp.int32)
+    m = jnp.asarray([2], jnp.int32)
+    emit = speculate.emission_window(drafts, corr, m)
+    assert emit[0].tolist() == [4, 6, 8]
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(draft_tier="4/4", k=0).validate()
+    SpecConfig(draft_tier="4/4", k=1).validate()
+
+
+# --------------------------------------------------- greedy identity
+@pytest.mark.parametrize("draft_tier", ["2/2", "4/4"])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_greedy_speculative_token_identical(draft_tier, k):
+    cfg, model, params, rt = _setup()
+    prompts = _prompts(cfg, 3)
+    base = _engine(model, params, rt).run(
+        [Request(uid=i, prompt=p, max_new_tokens=7, tier="8/8")
+         for i, p in enumerate(prompts)])
+    eng = _engine(model, params, rt)
+    spec = eng.run(
+        [Request(uid=i, prompt=p, max_new_tokens=7, tier="8/8",
+                 spec=SpecConfig(draft_tier=draft_tier, k=k))
+         for i, p in enumerate(prompts)])
+    assert spec == base
+    st = eng.stats
+    assert st.spec_rounds > 0
+    assert st.spec_draft_steps == st.spec_rounds * k
+    assert st.spec_verify_steps == st.spec_rounds
+    assert st.spec_emitted == sum(len(v) - 1 for v in spec.values())
+    assert 0 <= st.spec_accepted <= st.spec_drafted
+
+
+def test_mixed_speculative_and_plain_slots():
+    """One batch: a speculative slot + plain slots at other tiers.  Every
+    stream matches its solo reference; the plain slots never notice."""
+    cfg, model, params, rt = _setup()
+    prompts = _prompts(cfg, 3)
+    ref_spec = _engine(model, params, rt).run(
+        [Request(uid=0, prompt=prompts[0], max_new_tokens=8, tier="8/8")])
+    ref_plain = _engine(model, params, rt).run(
+        [Request(uid=1, prompt=prompts[1], max_new_tokens=8, tier="4/4"),
+         Request(uid=2, prompt=prompts[2], max_new_tokens=8, tier="8/8")])
+    eng = _engine(model, params, rt)
+    mixed = eng.run(
+        [Request(uid=0, prompt=prompts[0], max_new_tokens=8, tier="8/8",
+                 spec=SpecConfig(draft_tier="4/4", k=2)),
+         Request(uid=1, prompt=prompts[1], max_new_tokens=8, tier="4/4"),
+         Request(uid=2, prompt=prompts[2], max_new_tokens=8, tier="8/8")])
+    assert mixed[0] == ref_spec[0]
+    assert mixed[1] == ref_plain[1]
+    assert mixed[2] == ref_plain[2]
+    st = eng.stats
+    assert st.decode_slot_steps + st.decode_idle_slot_steps \
+        == st.decode_steps * 3
+
+
+def test_speculation_prepares_no_weights():
+    """Drafting is a plane-prefix read of the preloaded superplane store:
+    PREPARE_CALLS must not move after engine construction."""
+    cfg, model, params, rt = _setup()
+    prompts = _prompts(cfg, 2)
+    eng = _engine(model, params, rt, max_batch=2)
+    before = engine_mod.PREPARE_CALLS
+    eng.run([Request(uid=i, prompt=p, max_new_tokens=6, tier="8/8",
+                     spec=SpecConfig(draft_tier="2/2", k=3))
+             for i, p in enumerate(prompts)])
+    assert engine_mod.PREPARE_CALLS == before
+
+
+def test_full_acceptance_beats_one_verify_step_per_token():
+    """draft tier == verify tier -> every draft accepted -> strictly
+    fewer verify-tier decode steps than emitted tokens (the benchmark's
+    headline inequality, made deterministic)."""
+    cfg, model, params, rt = _setup()
+    prompts = _prompts(cfg, 2)
+    eng = _engine(model, params, rt, max_batch=2)
+    base = _engine(model, params, rt, max_batch=2).run(
+        [Request(uid=i, prompt=p, max_new_tokens=9, tier="8/8")
+         for i, p in enumerate(prompts)])
+    spec = eng.run([Request(uid=i, prompt=p, max_new_tokens=9, tier="8/8",
+                            spec=SpecConfig(draft_tier="8/8", k=4))
+                    for i, p in enumerate(prompts)])
+    assert spec == base
+    st = eng.stats
+    assert st.spec_verify_steps < st.spec_emitted
+    # full acceptance except where the budget truncates the window
+    assert st.spec_accepted > 0
+
+
+def test_sampled_speculation_deterministic():
+    """Sampled-mode speculation re-runs bit-identically (the stream is a
+    pure function of the request seed + draw counters)."""
+    cfg, model, params, rt = _setup()
+    prompts = _prompts(cfg, 2)
+
+    def serve():
+        eng = _engine(model, params, rt, max_batch=2)
+        out = eng.run(
+            [Request(uid=i, prompt=p, max_new_tokens=6, tier="8/8",
+                     sampling=SamplingParams(temperature=0.9, top_k=20,
+                                             seed=7 + i),
+                     spec=SpecConfig(draft_tier="4/4", k=2))
+             for i, p in enumerate(prompts)])
+        return out, eng.stats
+
+    a, st_a = serve()
+    b, st_b = serve()
+    assert a == b
+    assert st_a.spec_accepted == st_b.spec_accepted
+    assert all(len(v) == 6 for v in a.values())
+
+
+def test_greedy_speculative_hybrid_arch():
+    """The verify window's rollback must hold for SSM caches too: the
+    hybrid Mamba+attention+MoE config serves token-identically."""
+    cfg, model, params, rt = _setup("jamba-1.5-large-398b")
+    prompts = _prompts(cfg, 2)
+    base = _engine(model, params, rt, max_batch=2).run(
+        [Request(uid=i, prompt=p, max_new_tokens=6, tier="8/8")
+         for i, p in enumerate(prompts)])
+    spec = _engine(model, params, rt, max_batch=2).run(
+        [Request(uid=i, prompt=p, max_new_tokens=6, tier="8/8",
+                 spec=SpecConfig(draft_tier="4/4", k=2))
+         for i, p in enumerate(prompts)])
+    assert spec == base
+
+
+# ------------------------------------------------------- clean errors
+def test_spec_submit_validation():
+    cfg, model, params, rt = _setup()
+    eng = _engine(model, params, rt, max_batch=2)
+    with pytest.raises(ValueError, match="unknown draft tier"):
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2,
+                           tier="8/8",
+                           spec=SpecConfig(draft_tier="3/3", k=2)))
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        eng.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=2,
+                           tier="8/8",
+                           spec=SpecConfig(draft_tier="4/4", k=0)))
+
+
+def test_spec_rejected_without_schedule():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.policy import uniform_policy
+    rt = Runtime(policy=uniform_policy(8, 8), mode="serve")
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=32,
+                      decode_chunk=2)
+    with pytest.raises(ValueError, match="PrecisionSchedule"):
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2,
+                           spec=SpecConfig(draft_tier="4/4", k=2)))
+
+
+def test_batch_engine_rejects_spec_and_sampling():
+    cfg, model, params, rt = _setup()
+    eng = BatchServeEngine(model, params, rt, max_batch=2, max_len=32,
+                           tier="8/8")
+    with pytest.raises(ValueError, match="speculative"):
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2,
+                           spec=SpecConfig(draft_tier="4/4", k=2)))
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=2,
+                           sampling=SamplingParams(temperature=0.5)))
+    # temperature-0 SamplingParams are greedy: accepted
+    h = eng.submit(Request(uid=2, prompt=[1, 2], max_new_tokens=2,
+                           sampling=SamplingParams(temperature=0.0)))
+    assert h.uid == 2
+
+
+def test_spec_token_events_flagged():
+    cfg, model, params, rt = _setup()
+    eng = _engine(model, params, rt, max_batch=1)
+    h = eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=5,
+                           tier="8/8",
+                           spec=SpecConfig(draft_tier="4/4", k=2)))
+    eng.drain()
+    # first token comes from prefill (not speculative); later tokens from
+    # verify windows carry the speculative flag and the VERIFY tier.
+    assert not h.events[0].speculative
+    assert all(ev.speculative for ev in h.events[1:])
+    assert all(ev.tier == "8/8" for ev in h.events)
+    assert not any(ev.sampled for ev in h.events)

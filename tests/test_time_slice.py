@@ -1,0 +1,160 @@
+"""Time-slice fairness (``SLOPolicy(time_slice=N)``) + terminal-state
+retirement hygiene.
+
+Time slicing: best-effort RUNNING slots are voluntarily preempted after
+N scheduler ticks whenever requests wait, so long best-effort streams
+round-robin instead of holding slots to completion — and the resumed
+streams stay token-identical (they ride the ordinary preempt/resume
+snapshot path).  Retirement: retiring EVERY terminal request (FINISHED
+and SHED alike) leaves the engine with zero per-request host state.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.policy import uniform_schedule
+from repro.models.layers import Runtime
+from repro.models.transformer import LM
+from repro.serve import (Request, RequestStatus, ServeEngine, SLOPolicy)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = uniform_schedule({"8/8": (8, 8), "4/4": (4, 4)},
+                             kv_tiers={"8/8": 8, "4/4": 8})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    return cfg, model, params, sched, rt
+
+
+def _reqs(cfg, n, max_new=12):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=3 + i % 3),
+                    max_new_tokens=max_new, tier="8/8")
+            for i in range(n)]
+
+
+def test_time_slice_validation():
+    with pytest.raises(ValueError, match="time_slice"):
+        SLOPolicy(time_slice=0)
+    with pytest.raises(ValueError, match="time_slice"):
+        SLOPolicy(time_slice=-3)
+    assert SLOPolicy(time_slice=4).time_slice == 4
+    assert SLOPolicy().time_slice is None
+
+
+def test_time_slice_round_robins_best_effort(setup):
+    """3 long best-effort requests over 1 slot: with a slice every
+    request starts long before the first finishes; without one, strict
+    run-to-completion.  Streams stay token-identical either way."""
+    cfg, model, params, sched, rt = setup
+    reqs = _reqs(cfg, 3, max_new=12)
+
+    def serve(policy):
+        eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                          decode_chunk=2, scheduler_policy=policy)
+        handles = [eng.submit(Request(
+            uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+            tier=r.tier)) for r in reqs]
+        first_token_at = {}
+        while eng.has_work:
+            for ev in eng.step():
+                if ev.index == 0:
+                    first_token_at[ev.uid] = eng.clock
+        return eng, handles, first_token_at
+
+    eng_fifo, h_fifo, first_fifo = serve(None)
+    sliced = SLOPolicy(sched, time_slice=4)
+    eng_ts, h_ts, first_ts = serve(sliced)
+
+    # identical streams (preempt/resume is token-identical)
+    assert {h.uid: h.tokens for h in h_ts} \
+        == {h.uid: h.tokens for h in h_fifo}
+    assert eng_ts.stats.time_slice_preemptions > 0
+    assert eng_ts.stats.resumes >= eng_ts.stats.time_slice_preemptions
+    # fairness: with slicing, the LAST request's first token arrives well
+    # before the FIFO run's (which waits for 2 full 12-token streams).
+    assert first_ts[2] < first_fifo[2]
+
+
+def test_time_slice_never_fires_without_waiters(setup):
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=2, max_len=64,
+                      decode_chunk=2,
+                      scheduler_policy=SLOPolicy(sched, time_slice=1))
+    out = eng.run(_reqs(cfg, 2, max_new=10))
+    assert eng.stats.time_slice_preemptions == 0
+    assert all(len(v) == 10 for v in out.values())
+
+
+def test_time_slice_spares_deadlined_slots(setup):
+    """Deadlined requests are never sliced: their urgency is priced by
+    slack, and slicing them would burn deadline budget on fairness."""
+    cfg, model, params, sched, rt = setup
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2,
+                      scheduler_policy=SLOPolicy(sched, time_slice=2))
+    rng = np.random.default_rng(1)
+    first = eng.submit(Request(uid=0,
+                               prompt=rng.integers(0, cfg.vocab_size, size=4),
+                               max_new_tokens=10, tier="8/8",
+                               deadline=1000.0))
+    eng.step()
+    waiter = eng.submit(Request(uid=1,
+                                prompt=rng.integers(0, cfg.vocab_size,
+                                                    size=4),
+                                max_new_tokens=4, tier="8/8"))
+    while eng.has_work:
+        eng.step()
+    assert eng.stats.time_slice_preemptions == 0
+    assert len(first.tokens) == 10 and len(waiter.tokens) == 4
+
+
+def test_retire_releases_every_terminal_state(setup):
+    """FINISHED and SHED (cancelled mid-suspension, with policy residue)
+    requests all retire to an empty engine: no handles, no snapshots, no
+    scheduler or policy leftovers."""
+    cfg, model, params, sched, rt = setup
+    pol = SLOPolicy(sched, preempt=True)
+    eng = ServeEngine(model, params, rt, max_batch=1, max_len=64,
+                      decode_chunk=2, scheduler_policy=pol)
+    rng = np.random.default_rng(2)
+    h0 = eng.submit(Request(uid=0,
+                            prompt=rng.integers(0, cfg.vocab_size, size=4),
+                            max_new_tokens=8, tier="8/8"))
+    eng.step()
+    assert h0.status is RequestStatus.RUNNING
+    sus = eng.preempt(0)
+    assert h0.status is RequestStatus.SUSPENDED
+    assert 0 in eng._suspended and 0 in pol.remaining_tokens
+    eng.cancel(0)           # the normal suspended-state cleanup
+    # Put the residue BACK to prove retire() clears it on its own — the
+    # belt-and-braces path that makes "retire every terminal handle ->
+    # empty engine" an invariant rather than a happy-path accident.
+    eng._suspended[0] = sus
+    pol.remaining_tokens[0] = 5
+    h1 = eng.submit(Request(uid=1,
+                            prompt=rng.integers(0, cfg.vocab_size, size=4),
+                            max_new_tokens=3, tier="8/8"))
+    eng.drain()
+    assert h0.status is RequestStatus.SHED
+    assert h1.status is RequestStatus.FINISHED
+    toks0 = eng.retire(0)
+    toks1 = eng.retire(1)
+    assert toks0 == list(h0.tokens) and toks1 == list(h1.tokens)
+    assert eng.handles == {}
+    assert eng._suspended == {}
+    assert pol.remaining_tokens == {}
+    assert eng.results == {}
+    assert eng._seen_uids == set()
+    # a retired uid may be submitted again
+    h2 = eng.submit(Request(uid=0,
+                            prompt=rng.integers(0, cfg.vocab_size, size=4),
+                            max_new_tokens=2, tier="8/8"))
+    eng.drain()
+    assert h2.status is RequestStatus.FINISHED

@@ -370,6 +370,72 @@ def bench_serve_mixed_tiers():
          "token_identical_vs_fixed_tier=True")
 
 
+def bench_serve_observability():
+    """Telemetry-on vs telemetry-off serving on the mixed-tier trace.
+
+    The two contracts of ``repro.telemetry`` priced and asserted: the
+    telemetry-off engine drains the stream without a single hook call
+    (the module-level HOOK_CALLS spy), and the telemetry-on engine — with
+    the device profiler fencing every dispatch — stays token-identical.
+    Derived reports both throughputs plus the TTFT/TPOT p50/p99 the
+    registry's histograms estimate without storing samples."""
+    from repro.configs import reduced_config
+    from repro.core.policy import uniform_schedule
+    from repro.models.layers import Runtime
+    from repro.models.transformer import LM
+    from repro.serve.engine import Request, ServeEngine
+    import repro.telemetry as telemetry_mod
+    from repro.telemetry import Telemetry
+
+    cfg = reduced_config("granite-3-8b")
+    model = LM(cfg)
+    rng = np.random.default_rng(13)
+    params = model.init(jax.random.PRNGKey(0))
+    tiers = {"8/8": (8, 8), "4/4": (4, 4), "2/2": (2, 2)}
+    sched = uniform_schedule(tiers, backend="decomposed",
+                             kv_tiers={"8/8": None, "4/4": 8, "2/2": 4})
+    rt = Runtime(policy=sched.policy_for(), mode="serve", moe_dropless=True,
+                 schedule=sched)
+    names = list(tiers)
+    budgets = (8, 6, 7, 5, 8, 6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=3 + i % 5)
+               for i in range(6)]
+
+    def requests():
+        return [Request(uid=i, prompt=prompts[i], max_new_tokens=budgets[i],
+                        tier=names[i % 3]) for i in range(6)]
+
+    off = ServeEngine(model, params, rt, max_batch=3, max_len=64,
+                      decode_chunk=4)
+    hooks_before = telemetry_mod.HOOK_CALLS
+    t0 = time.perf_counter()
+    got_off = off.run(requests())
+    dt_off = time.perf_counter() - t0
+    assert telemetry_mod.HOOK_CALLS == hooks_before, \
+        "telemetry-off engine took observability hooks"
+
+    tele = Telemetry(profile=True)
+    on = ServeEngine(model, off.params, rt, max_batch=3, max_len=64,
+                     decode_chunk=4, telemetry=tele)
+    t0 = time.perf_counter()
+    got_on = on.run(requests())
+    dt_on = time.perf_counter() - t0
+    assert got_on == got_off, "telemetry changed tokens"
+
+    reg = tele.registry
+    ttft = reg.get("serve_ttft_ticks")
+    tpot = reg.get("serve_tpot_ticks")
+    toks = sum(len(v) for v in got_off.values())
+    _row("serve_observability", dt_on * 1e6 / max(len(got_on), 1),
+         f"tokens/s off={toks/dt_off:.1f} on={toks/dt_on:.1f} "
+         f"ttft_ticks p50={ttft.quantile(0.5):.1f} "
+         f"p99={ttft.quantile(0.99):.1f} "
+         f"tpot_ticks p50={tpot.quantile(0.5):.1f} "
+         f"p99={tpot.quantile(0.99):.1f} "
+         f"cycle_util={reg.value('serve_modeled_cycle_utilization'):.2f} "
+         f"hook_calls=0_when_off token_identical=True")
+
+
 def bench_fused_decode():
     """One-kernel mixed-tier decode vs the per-group loop it replaced.
 
@@ -902,6 +968,7 @@ BENCHES = {
     "serve_continuous_batching": bench_continuous_batching,
     "serve_precision_tiers": bench_serve_precision_tiers,
     "serve_mixed_tiers": bench_serve_mixed_tiers,
+    "serve_observability": bench_serve_observability,
     "fused_decode": bench_fused_decode,
     "serve_slo_scheduling": bench_serve_slo_scheduling,
     "serve_overload": bench_serve_overload,
@@ -921,11 +988,18 @@ def main(argv=None) -> None:
                     help="run only these rows (CI smoke)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate available rows (name: summary) and exit")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR8.json",
-                    default=None, metavar="PATH",
+    ap.add_argument("--pr", default=os.environ.get("BENCH_PR", "10"),
+                    metavar="N",
+                    help="PR number stamped into the default --json "
+                         "artifact name (BENCH_PR<N>.json; env BENCH_PR "
+                         "overrides the built-in default)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
                     help="also persist the rows as a JSON artifact "
-                         "(default path: BENCH_PR8.json)")
+                         "(default path: BENCH_PR<--pr>.json)")
     args = ap.parse_args(argv)
+    if args.json == "":
+        args.json = f"BENCH_PR{args.pr}.json"
     if args.list:
         for name in sorted(BENCHES):
             doc = (BENCHES[name].__doc__ or "").strip().splitlines()

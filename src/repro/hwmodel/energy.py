@@ -214,6 +214,27 @@ def relative_tier_costs(schedule: Any,
     / deeper bit-serial activations occupies the modeled array longer per
     token, so a deadline-aware scheduler must budget more service time for
     its requests."""
+    raw = tier_cycles_per_token(schedule, mac_counts)
+    floor = min(raw.values())
+    return {name: c / floor for name, c in raw.items()}
+
+
+def tier_cycles_per_token(schedule: Any,
+                          mac_counts: Optional[Mapping[str, float]] = None
+                          ) -> Dict[str, float]:
+    """Absolute modeled array cycles ONE token costs at each tier of a
+    ``PrecisionSchedule`` — the unnormalized sibling of
+    :func:`relative_tier_costs` (same pricing rules: per-layer
+    ``schedule.lookup`` when ``mac_counts`` is given, the tier's default
+    operating point otherwise, in which case the figure is cycles/MAC
+    rather than cycles/token).
+
+    This is the telemetry layer's price list: ``repro.telemetry`` weighs
+    busy and idle decode lanes by these cycles to report *modeled-cycle
+    utilization* — the fraction of array cycles the dispatched decode
+    chunks occupied that served an actual token, the paper's utilization
+    metric made observable.  Absolute (not normalized) pricing is what
+    lets an 8/8 lane and a 2/2 lane add into one meaningful ratio."""
     raw: Dict[str, float] = {}
     for t in schedule.tier_names:
         if mac_counts:
@@ -225,8 +246,7 @@ def relative_tier_costs(schedule: Any,
         else:
             w, a = schedule.tier_bits(t)
             raw[t] = cycles_per_mac(int(w), int(a))
-    floor = min(raw.values())
-    return {name: c / floor for name, c in raw.items()}
+    return raw
 
 
 def fastest_tier(schedule: Any,

@@ -58,6 +58,7 @@ sampling (deterministic across eager/jit and mesh widths):
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -70,6 +71,7 @@ from repro.models.transformer import LM
 from repro.serve import (BatchServeEngine, Request, ServeEngine, SLOPolicy,
                          prepare_params)
 from repro.serve.handle import RequestStatus
+from repro.telemetry import Telemetry, serve_report, write_json
 
 
 def main(argv=None):
@@ -164,6 +166,20 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0, metavar="K",
                     help="with --temperature > 0: restrict sampling to the "
                          "K highest-probability tokens (0 = full vocab)")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="export the run's metrics: Prometheus text to "
+                         "stdout (bare --metrics) or to PATH; a .json "
+                         "suffix writes the JSON snapshot instead")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write the dual-clock span trace as Chrome "
+                         "trace-event JSON (loadable in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--profile", action="store_true",
+                    help="opt-in device timing: fence each prefill/decode-"
+                         "chunk/spec-round dispatch (block_until_ready) and "
+                         "report per-phase device seconds — bit-identical "
+                         "output, adds host syncs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -302,10 +318,16 @@ def main(argv=None):
               f"in {time.time()-t0:.1f}s")
     rt = Runtime(policy=policy, mode="serve", moe_dropless=args.reduced,
                  schedule=schedule)
+    # The driver always runs with telemetry attached (the zero-cost-when-
+    # off contract matters for the library; a demo CLI can afford the
+    # hooks) — the end-of-run report, --metrics and --trace-out all read
+    # from it.
+    tele = Telemetry(profile=args.profile)
     if args.baseline:
         engine = BatchServeEngine(model, params, rt,
                                   max_batch=args.max_batch,
-                                  max_len=args.max_len, kv_bits=args.kv_bits)
+                                  max_len=args.max_len, kv_bits=args.kv_bits,
+                                  telemetry=tele)
     else:
         # Rules-aware tier pricing: searched schedules (per-layer rule
         # tiers over a common default) only price differently when each
@@ -324,7 +346,8 @@ def main(argv=None):
                              decode_chunk=args.decode_chunk,
                              mixed_tiers=not args.serialize_tiers,
                              scheduler_policy=scheduler_policy,
-                             mesh=mesh, spill_dir=args.spill_dir)
+                             mesh=mesh, spill_dir=args.spill_dir,
+                             telemetry=tele)
         if mesh is not None:
             tp = engine._tp
             assert tp is not None
@@ -413,47 +436,39 @@ def main(argv=None):
     assert all(results[h.uid] == engine.results[h.uid] for h in handles
                if h.status is RequestStatus.FINISHED)
     toks = sum(len(v) for v in results.values())
-    st = engine.stats
     print(f"served {len(reqs)} requests, {toks} tokens "
           f"({events} streamed events) in {dt:.2f}s ({toks/dt:.1f} tok/s)")
-    print(f"stats: prefills={st.prefills} decode_steps={st.decode_steps} "
-          f"slot_steps={st.decode_slot_steps} chunks={st.decode_chunks}")
-    if args.tiers:
-        per = " ".join(f"{t}:{st.decode_steps_by_tier.get(t, 0)}"
-                       for t in args.tiers)
-        mode = "serialized" if args.serialize_tiers else "mixed"
-        print(f"tier decode_steps ({mode}): {per} "
-              f"(switches={st.tier_switches} "
-              f"mixed_chunks={st.mixed_tier_chunks} "
-              f"migrations={st.tier_migrations} "
-              f"kv_migrations={st.kv_migrations})")
-    if args.slo:
-        waits = np.array([h.queue_wait for h in handles
-                          if h.queue_wait is not None])
-        misses = sum(1 for h in handles
-                     if h.status is RequestStatus.FINISHED
-                     and h.request.deadline is not None
-                     and h.finished_at > h.submitted_at + h.request.deadline)
-        print(f"slo: queue_wait p50={np.percentile(waits, 50):.0f} "
-              f"p99={np.percentile(waits, 99):.0f} ticks, "
-              f"deadline_misses={misses}/{len(handles)}, "
-              f"tier_autoselects={st.tier_autoselects}")
-    if args.speculate:
-        acc = (st.spec_accepted / st.spec_drafted
-               if st.spec_drafted else 0.0)
-        vpt = (st.spec_verify_steps / st.spec_emitted
-               if st.spec_emitted else float("nan"))
-        print(f"speculate: rounds={st.spec_rounds} k={args.spec_k} "
-              f"draft={args.draft_tier} "
-              f"accepted={st.spec_accepted}/{st.spec_drafted} "
-              f"({acc:.0%}) emitted={st.spec_emitted} "
-              f"verify_steps/token={vpt:.2f}")
+    # The per-section stat blocks this driver used to hand-format all read
+    # from the telemetry registry now — the EngineStats twins plus the
+    # derived gauges/histograms — so a stat prints here by being
+    # registered, not by editing four format strings.
+    print(serve_report(tele.registry, tiers=args.tiers,
+                       mixed=not args.serialize_tiers, slo=args.slo,
+                       speculate=args.speculate,
+                       overload=args.preempt or args.shed))
     if args.preempt or args.shed:
         shed_uids = [h.uid for h in handles
                      if h.status is RequestStatus.SHED]
-        print(f"overload: preemptions={st.preemptions} "
-              f"resumes={st.resumes} sheds={st.sheds} "
-              f"spill_bytes={st.spill_bytes} shed_uids={shed_uids}")
+        print(f"shed_uids={shed_uids}")
+    if args.profile:
+        assert tele.profiler is not None
+        print("profile: " + json.dumps(tele.profiler.snapshot()["phases"],
+                                       sort_keys=True))
+    if args.metrics is not None:
+        if args.metrics == "-":
+            print(tele.prometheus(), end="")
+        elif args.metrics.endswith(".json"):
+            prof = tele.profiler.snapshot() if tele.profiler else None
+            write_json(args.metrics, tele.registry, prof)
+            print(f"metrics: wrote {args.metrics}")
+        else:
+            with open(args.metrics, "w") as fh:
+                fh.write(tele.prometheus())
+            print(f"metrics: wrote {args.metrics}")
+    if args.trace_out:
+        tele.write_trace(args.trace_out)
+        print(f"trace: wrote {args.trace_out} "
+              f"({len(tele.tracer.chrome_events())} events)")
     return results
 
 

@@ -284,7 +284,7 @@ class EngineStats:
     # per group layout, the jaxpr ``pallas_call`` count of ONE jitted decode
     # step — with the fused grouped kernel this is CONSTANT in the number of
     # tier groups (asserted in tests/test_grouped_kernel.py).
-    decode_dispatches: Dict[Any, int] = dataclasses.field(
+    decode_dispatches: Dict[GroupLayout, int] = dataclasses.field(
         default_factory=dict)
 
 
@@ -413,7 +413,8 @@ class ServeEngine(_DeferredErrors):
                  count_dispatches: bool = False,
                  scheduler_policy: Optional[SchedulerPolicy] = None,
                  mesh: Optional[Any] = None,
-                 spill_dir: Optional[str] = None) -> None:
+                 spill_dir: Optional[str] = None,
+                 telemetry: Optional[Any] = None) -> None:
         self.model = model
         # ``fused_decode`` selects the mixed-tier grouped-matmul
         # implementation: one group-switching kernel (default) vs the
@@ -466,6 +467,17 @@ class ServeEngine(_DeferredErrors):
             self._tp = self._init_mesh_placement(mesh)
         self.scheduler = Scheduler(max_batch, policy=scheduler_policy)
         self.stats = EngineStats()
+        # Observability (repro.telemetry.Telemetry, duck-typed so serve
+        # never imports the telemetry package).  The contract: EVERY hook
+        # call below is guarded by ``telemetry is not None`` and the engine
+        # itself never fences — a telemetry-None engine runs the decode hot
+        # loop with zero added host syncs, allocations, or hook calls.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.attach_engine(
+                num_slots=max_batch, schedule=self.schedule,
+                mac_counts=model.cfg.quant_layer_macs()
+                if self.schedule is not None else None)
         # Group-layout memo: slot-tier vector -> (groups, perm).  Recurring
         # mixed-batch layouts (the steady state) skip the per-step Python
         # sort; hits/misses are surfaced on EngineStats.
@@ -952,6 +964,14 @@ class ServeEngine(_DeferredErrors):
         """True while anything waits or decodes."""
         return self.scheduler.has_work
 
+    def _sync_telemetry(self) -> None:
+        """Mirror EngineStats into the telemetry registry (called after
+        every state-changing op so the twins are ALWAYS consistent — the
+        fuzz harness asserts equality after each operation)."""
+        if self.telemetry is not None:
+            self.telemetry.sync_stats(
+                self.stats, queue_depth=self.scheduler.queue_depth)
+
     # ----------------------------------------------------------------- intake
     def submit(self, request: Request) -> RequestHandle:
         """Queue one request; returns its streaming :class:`RequestHandle`.
@@ -1020,6 +1040,10 @@ class ServeEngine(_DeferredErrors):
             if decision == "shed":
                 handle._mark_shed(self.clock)
                 self.stats.sheds += 1
+                if self.telemetry is not None:
+                    self.telemetry.on_submit(handle, ticks=self.clock)
+                    self.telemetry.on_shed(handle, ticks=self.clock)
+                self._sync_telemetry()
                 return handle
             if decision != "admit":
                 request.tier = decision        # our normalized copy
@@ -1027,6 +1051,9 @@ class ServeEngine(_DeferredErrors):
         # Handle and scheduler share the SAME (normalized) Request object,
         # so a QUEUED set_tier re-tags the queue entry in place.
         self.scheduler.submit(request, now=self.clock)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(handle, ticks=self.clock)
+        self._sync_telemetry()
         return handle
 
     # -------------------------------------------------------------- migration
@@ -1067,15 +1094,24 @@ class ServeEngine(_DeferredErrors):
                 "serialized decode batch runs one tier at a time)")
         slot = handle.slot
         assert slot is not None
+        kv_migrated = False
+        t0 = self.telemetry.wall() if self.telemetry is not None else 0.0
         if self._mixed_kv:
             new_code = self.schedule.kv_code_for(tier)
             if new_code != self.schedule.kv_code_for(old):
                 self.arena.caches = self._migrate_kv(
                     self.arena.caches, jnp.int32(slot), jnp.int32(new_code))
                 self.stats.kv_migrations += 1
+                kv_migrated = True
         handle.request.tier = tier          # shared with the SlotState
         self.arena.tiers[slot] = tier
         self.stats.tier_migrations += 1
+        if self.telemetry is not None:
+            self.telemetry.on_migrate(
+                uid=handle.uid, old_tier=old, new_tier=tier, kv=kv_migrated,
+                ticks=self.clock, t0=t0 if kv_migrated else None,
+                fence=self.arena.caches if kv_migrated else None)
+        self._sync_telemetry()
 
     # ------------------------------------------------------------- preemption
     @property
@@ -1146,6 +1182,9 @@ class ServeEngine(_DeferredErrors):
             pol.remaining_tokens[uid] = sus.remaining
         self.scheduler.submit(state.request, now=handle.submitted_at)
         self.stats.preemptions += 1
+        if self.telemetry is not None:
+            self.telemetry.on_suspend(handle, ticks=self.clock)
+        self._sync_telemetry()
         return sus
 
     def _policy_preempt(self) -> None:
@@ -1195,6 +1234,9 @@ class ServeEngine(_DeferredErrors):
             pol.remaining_tokens.pop(req.uid, None)
         self.handles[req.uid]._mark_admitted(slot, self.clock)
         self.stats.resumes += 1
+        if self.telemetry is not None:
+            self.telemetry.on_admit(self.handles[req.uid], slot=slot,
+                                    ticks=self.clock, resumed=True)
 
     def _load_sampling_state(self, slot: int, req: Request, *,
                              draws: int) -> None:
@@ -1281,6 +1323,9 @@ class ServeEngine(_DeferredErrors):
             pol.remaining_tokens.pop(uid, None)
         handle._mark_shed(self.clock)
         self.stats.sheds += 1
+        if self.telemetry is not None:
+            self.telemetry.on_shed(handle, ticks=self.clock)
+        self._sync_telemetry()
 
     # ------------------------------------------------------------- scheduling
     def _bucket_pad(self,
@@ -1316,6 +1361,8 @@ class ServeEngine(_DeferredErrors):
                            speculative=speculative)
         self.handles[state.uid]._push(event, self.clock,
                                       defer=self._defer_error)
+        if self.telemetry is not None:
+            self.telemetry.on_token(event, ticks=self.clock)
         return event
 
     def _admit_free_slots(self) -> List[TokenEvent]:
@@ -1356,6 +1403,7 @@ class ServeEngine(_DeferredErrors):
             kv_code = self.schedule.kv_code_for(req.tier) \
                 if self._mixed_kv else 0
             self._load_sampling_state(slot, req, draws=0)
+            t0 = self.telemetry.wall() if self.telemetry is not None else 0.0
             tok, self.arena.caches = self._prefill_slot(
                 self.params, self.arena.caches, jnp.int32(slot),
                 jnp.asarray(padded), jnp.int32(plen), jnp.int32(kv_code),
@@ -1365,6 +1413,10 @@ class ServeEngine(_DeferredErrors):
             self.arena.tiers[slot] = req.tier
             self.stats.prefills += 1
             self.stats.prefill_tokens += plen
+            if self.telemetry is not None:
+                self.telemetry.on_prefill(
+                    uid=req.uid, tier=req.tier, prompt_len=plen, t0=t0,
+                    ticks=self.clock, fence=self.arena.caches)
             # The first token was draw event 0 (sampled rows only).
             if self._temp[slot] > 0.0:
                 self._draws[slot] = 1
@@ -1373,6 +1425,9 @@ class ServeEngine(_DeferredErrors):
             state = self.scheduler.slots[slot]
             assert state is not None
             self.handles[req.uid]._mark_admitted(slot, self.clock)
+            if self.telemetry is not None:
+                self.telemetry.on_admit(self.handles[req.uid], slot=slot,
+                                        ticks=self.clock)
             events.append(self._emit_token(state, first,
                                            req.tier))  # token 1 of max_new
             self._tok[slot] = first
@@ -1477,6 +1532,7 @@ class ServeEngine(_DeferredErrors):
             return self._step_round()
         finally:
             self._in_round = False
+            self._sync_telemetry()
 
     def _time_slice_preempt(self) -> None:
         """Time-slice fairness (``SLOPolicy(time_slice=N)``): between
@@ -1525,17 +1581,23 @@ class ServeEngine(_DeferredErrors):
         # (keyed per distinct length: at most decode_chunk jit entries).
         n_steps = int(min(self.decode_chunk,
                           max(s.remaining for _, s in occupied)))
+        tele = self.telemetry
         groups: Optional[GroupLayout]
         if self.schedule is not None and self.mixed_tiers:
             groups, perm = self._group_layout()
             tier = None
-            if self.count_dispatches \
-                    and groups not in self.stats.decode_dispatches:
+            # A profiling telemetry wants the per-layout dispatch counts
+            # too (same jaxpr counting, same memo dict).
+            want_counts = self.count_dispatches or (
+                tele is not None and tele.profiler is not None)
+            if want_counts and groups not in self.stats.decode_dispatches:
                 self.stats.decode_dispatches[groups] = \
                     self.decode_dispatch_count(groups=groups)
         else:
             groups, perm = None, np.zeros((self.max_batch,), np.int32)
             tier = self._active_tier
+        t0 = tele.wall() if tele is not None else 0.0
+        ticks0 = self.clock
         (self.arena.caches, tok, remaining, draws, toks, actives) = \
             self._decode_chunk(self.params, self.arena.caches,
                                jnp.asarray(self._tok),
@@ -1566,6 +1628,17 @@ class ServeEngine(_DeferredErrors):
                 t = self.arena.tiers[slot] if self.mixed_tiers else tier
                 assert t is not None
                 tk[t] = tk.get(t, 0) + int(actives[:, slot].sum())
+        if tele is not None:
+            # Free lanes carry tier None (priced at the schedule default —
+            # the dense batch dispatches them either way).
+            lanes = [(self.arena.tiers[s], int(actives[:, s].sum()))
+                     for s in range(self.max_batch)]
+            tele.on_decode_chunk(
+                t0=t0, ticks0=ticks0, ticks_end=self.clock,
+                n_steps=n_steps, lanes=lanes, groups=groups,
+                fence=self.arena.caches,
+                dispatches=self.stats.decode_dispatches.get(groups)
+                if groups is not None else None)
         # Emission in true stream order (step-major): per-request order is
         # identical to the historical slot-major loop.  Event tiers are the
         # tiers the chunk DISPATCHED at (a set_tier from a callback must
@@ -1611,6 +1684,9 @@ class ServeEngine(_DeferredErrors):
             draft_tiers[slot] = s.request.spec.draft_tier
         draft_groups, perm_d = self._group_layout(tiers=draft_tiers)
         verify_groups, perm_v = self._group_layout()
+        tele = self.telemetry
+        t0 = tele.wall() if tele is not None else 0.0
+        ticks0 = self.clock
         (self.arena.caches, tok, remaining, draws, dtoks, dact, win, e,
          m) = self._spec_round(
             self.params, self.arena.caches, jnp.asarray(self._tok),
@@ -1661,6 +1737,18 @@ class ServeEngine(_DeferredErrors):
                 n += int(e[slot])
             if n:
                 tk[t] = tk.get(t, 0) + n
+        if tele is not None:
+            # Spec slots are busy all k draft steps AND the verify step;
+            # plain slots decode normally through the draft phase only.
+            draft_lanes = [
+                (draft_tiers[s], k if spec_mask[s]
+                 else int(dact[:, s].sum())) for s in range(self.max_batch)]
+            verify_lanes = [(self.arena.tiers[s], 1 if spec_mask[s] else 0)
+                            for s in range(self.max_batch)]
+            tele.on_spec_round(
+                t0=t0, ticks0=ticks0, ticks_end=self.clock, k=k,
+                draft_lanes=draft_lanes, verify_lanes=verify_lanes,
+                fence=self.arena.caches, args={"n_spec": n_spec})
         # Emission: plain slots step-major through the draft phase, then
         # each spec slot's verified window (decoded AT the verify tier).
         etier = {slot: self.arena.tiers[slot] for slot, _ in occupied}
@@ -1772,7 +1860,8 @@ class BatchServeEngine(_DeferredErrors):
     def __init__(self, model: LM, params: Any, rt: Runtime, *,
                  max_batch: int = 8, max_len: int = 512,
                  kv_bits: Optional[int] = None, packed: bool = False,
-                 tier: Optional[str] = None) -> None:
+                 tier: Optional[str] = None,
+                 telemetry: Optional[Any] = None) -> None:
         self.model = model
         if rt.schedule is not None and tier is not None \
                 and tier not in rt.schedule.tiers:
@@ -1791,6 +1880,13 @@ class BatchServeEngine(_DeferredErrors):
         self.max_len = max_len
         self.kv_bits = kv_bits
         self.stats = EngineStats()
+        # Minimal telemetry (lifecycle + stat twins; no device spans): the
+        # baseline exists for parity runs, and ``--baseline --metrics``
+        # should still export.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.attach_engine(num_slots=max_batch,
+                                    schedule=rt.schedule)
         self.handles: Dict[int, RequestHandle] = {}
         self.results: Dict[int, List[int]] = {}
         self._queue: List[Request] = []
@@ -1836,6 +1932,10 @@ class BatchServeEngine(_DeferredErrors):
         handle = RequestHandle(request, self, submitted_at=self.clock)
         self.handles[request.uid] = handle
         self._queue.append(request)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(handle, ticks=self.clock)
+            self.telemetry.sync_stats(self.stats,
+                                      queue_depth=len(self._queue))
         return handle
 
     def _set_tier(self, handle: RequestHandle, tier: str) -> None:
@@ -1860,6 +1960,10 @@ class BatchServeEngine(_DeferredErrors):
         self._queue = [r for r in self._queue if r.uid != uid]
         handle._mark_shed(self.clock)
         self.stats.sheds += 1
+        if self.telemetry is not None:
+            self.telemetry.on_shed(handle, ticks=self.clock)
+            self.telemetry.sync_stats(self.stats,
+                                      queue_depth=len(self._queue))
 
     # ------------------------------------------------------------------- run
     def _start_batch(self) -> None:
@@ -1875,14 +1979,23 @@ class BatchServeEngine(_DeferredErrors):
             prompts[i, :len(r.prompt)] = r.prompt    # right-pad
             lengths[i] = len(r.prompt)
         caches = self.model.init_cache(b, self.max_len, kv_bits=self.kv_bits)
+        t0 = self.telemetry.wall() if self.telemetry is not None else 0.0
         logits, caches = self._prefill(self.params, caches,
                                        jnp.asarray(prompts),
                                        jnp.asarray(lengths))
         self.stats.prefills += b
         self.stats.prefill_tokens += int(lengths.sum())
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if self.telemetry is not None:
+            # One batch-wide prefill dispatch (uid -1 = whole batch).
+            self.telemetry.on_prefill(uid=-1, tier=self.tier_name,
+                                      prompt_len=int(lengths.sum()), t0=t0,
+                                      ticks=self.clock, fence=caches)
         for i, r in enumerate(batch):
             self.handles[r.uid]._mark_admitted(i, self.clock)
+            if self.telemetry is not None:
+                self.telemetry.on_admit(self.handles[r.uid], slot=i,
+                                        ticks=self.clock)
         self._active = _BatchState(
             batch=batch, caches=caches, tok=tok,
             outs=[[] for _ in range(b)], step_idx=0,
@@ -1911,11 +2024,25 @@ class BatchServeEngine(_DeferredErrors):
                 events.append(event)
                 self.handles[r.uid]._push(event, self.clock,
                                           defer=self._defer_error)
+                if self.telemetry is not None:
+                    self.telemetry.on_token(event, ticks=self.clock)
+        ticks0 = self.clock
+        t0 = self.telemetry.wall() if self.telemetry is not None else 0.0
         logits, a.caches = self._decode(self.params, a.caches, a.tok[:, None])
         a.tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.stats.decode_steps += 1
         self.stats.decode_slot_steps += len(a.batch)
         a.step_idx += 1
+        if self.telemetry is not None:
+            # Every batch lane burns the step (the baseline's defining
+            # waste is visible as utilization 1.0 only while all requests
+            # are still owed tokens).
+            self.telemetry.on_decode_chunk(
+                t0=t0, ticks0=ticks0, ticks_end=self.clock, n_steps=1,
+                lanes=[(self.tier_name, 1) for _ in a.batch],
+                fence=a.caches)
+            self.telemetry.sync_stats(self.stats,
+                                      queue_depth=len(self._queue))
         if a.step_idx >= a.max_new:
             for i, r in enumerate(a.batch):
                 self.results[r.uid] = a.outs[i][: r.max_new_tokens]

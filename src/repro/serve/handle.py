@@ -98,6 +98,7 @@ class RequestHandle:
         self.events: List[TokenEvent] = []
         self.submitted_at = submitted_at
         self.admitted_at: Optional[float] = None
+        self.first_token_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.slot: Optional[int] = None
         self._callbacks: List[Callable[[TokenEvent], None]] = []
@@ -126,6 +127,16 @@ class RequestHandle:
         if self.admitted_at is None:
             return None
         return self.admitted_at - self.submitted_at
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Scheduler-clock ticks from submission to the FIRST emitted
+        token (None until one streams).  With prefill emitting token 1 at
+        admission this usually equals ``queue_wait``; the two diverge only
+        for resumed streams, whose first token predates any suspension."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
 
     # ------------------------------------------------------------ streaming
     def on_token(self, callback: Callable[[TokenEvent], None]) -> None:
@@ -204,6 +215,8 @@ class RequestHandle:
         rather than being masked by an unrelated callback failure."""
         self.events.append(event)
         self.tokens.append(event.token)
+        if self.first_token_at is None:
+            self.first_token_at = now
         if event.final:
             self.status = RequestStatus.FINISHED
             self.slot = None

@@ -426,6 +426,12 @@ class Scheduler:
         self.waiting.append(request)
         self.submitted_at[request.uid] = now
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests currently waiting for a slot (the telemetry gauge's
+        source of truth)."""
+        return len(self.waiting)
+
     def free_slots(self) -> List[int]:
         """Indices of currently unoccupied slots."""
         return [i for i, s in enumerate(self.slots) if s is None]

@@ -1,0 +1,66 @@
+"""Opt-in device-timing hooks (``Telemetry(profile=True)``).
+
+JAX dispatch is asynchronous: the wall time around a jitted call measures
+enqueue cost, not device work.  The profiler closes that gap by FENCING —
+``jax.block_until_ready`` on the dispatch's result tree — before taking
+the end timestamp, so each recorded phase duration covers the device
+computation.  Fencing is a real host sync, which is exactly why device
+timing is opt-in and lives here rather than in the default-on span layer:
+with the profiler off (or telemetry off entirely) the engine performs
+ZERO ``block_until_ready`` calls (asserted by
+``tests/test_telemetry.py``), and fencing never changes computed bits —
+it only waits for them.
+
+Phases mirror the engine's jitted dispatch sites: ``prefill``,
+``decode_chunk``, ``spec_round``, ``migrate_kv``.  The profiler also
+carries the per-layout jaxpr pallas-dispatch counts the engine already
+derives through ``ServeEngine.decode_dispatch_count`` (a profiling
+engine counts every layout it dispatches, exactly like
+``count_dispatches=True``), so one snapshot answers both "how long did
+decode chunks take on device" and "how many kernels does one step
+launch".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+__all__ = ["DeviceProfiler"]
+
+
+class DeviceProfiler:
+    """Per-phase device timing accumulator (see module docstring)."""
+
+    def __init__(self) -> None:
+        self.phase_seconds: Dict[str, float] = {}
+        self.phase_calls: Dict[str, int] = {}
+        # Group-layout label -> pallas_call count of one jitted decode
+        # step (from the engine's jaxpr counting).
+        self.dispatch_counts: Dict[str, int] = {}
+
+    def fence(self, tree: Any) -> None:
+        """Block until every array in ``tree`` is computed (device sync)."""
+        jax.block_until_ready(tree)
+
+    def record(self, phase: str, seconds: float) -> None:
+        self.phase_seconds[phase] = \
+            self.phase_seconds.get(phase, 0.0) + seconds
+        self.phase_calls[phase] = self.phase_calls.get(phase, 0) + 1
+
+    def record_dispatch_count(self, layout_label: str, count: int) -> None:
+        self.dispatch_counts[layout_label] = count
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able per-phase totals, call counts and mean seconds."""
+        return {
+            "phases": {
+                phase: {
+                    "calls": self.phase_calls.get(phase, 0),
+                    "total_s": total,
+                    "mean_s": total / max(self.phase_calls.get(phase, 1), 1),
+                }
+                for phase, total in sorted(self.phase_seconds.items())
+            },
+            "decode_dispatches": dict(self.dispatch_counts),
+        }

@@ -39,15 +39,20 @@ def test_docs_exist_and_are_linked_from_readme():
     assert os.path.isfile(os.path.join(REPO, "docs", "autoprec.md"))
     assert os.path.isfile(os.path.join(REPO, "docs", "distributed.md"))
     assert os.path.isfile(os.path.join(REPO, "docs", "speculative.md"))
+    assert os.path.isfile(os.path.join(REPO, "docs", "observability.md"))
     readme = open(os.path.join(REPO, "README.md")).read()
     assert "docs/architecture.md" in readme, "README must link the docs"
     assert "docs/serving.md" in readme, "README must link the docs"
     assert "docs/autoprec.md" in readme, "README must link the docs"
     assert "docs/distributed.md" in readme, "README must link the docs"
     assert "docs/speculative.md" in readme, "README must link the docs"
+    assert "docs/observability.md" in readme, "README must link the docs"
     arch = open(os.path.join(REPO, "docs", "architecture.md")).read()
     assert "speculative.md" in arch, \
         "architecture.md must link the speculative-decoding doc"
+    serving = open(os.path.join(REPO, "docs", "serving.md")).read()
+    assert "observability.md" in serving, \
+        "serving.md must link the observability doc"
 
 
 @pytest.mark.parametrize("doc", _doc_ids())

@@ -40,6 +40,7 @@ reference).
 interleaving count; hypothesis, when installed, drives extra randomized
 seeds through the same harness.
 """
+import dataclasses
 import os
 
 import jax
@@ -53,6 +54,7 @@ from repro.models.layers import Runtime
 from repro.models.transformer import LM
 from repro.serve import (Request, RequestStatus, ServeEngine, SLOPolicy,
                          SpecConfig)
+from repro.telemetry import Telemetry
 
 N_EXAMPLES = int(os.environ.get("SERVE_FUZZ_EXAMPLES", "200"))
 
@@ -87,8 +89,12 @@ def fuzz_engine():
                  schedule=sched)
     pol = SLOPolicy(sched, preempt=True, preempt_slack=4.0, shed=True,
                     tenant_weights={"gold": 2.0}, time_slice=6)
+    # The fuzz engine carries live telemetry so every interleaving also
+    # fuzzes the hooks, and check_invariants can assert the registry twins
+    # never drift from EngineStats.
     eng = ServeEngine(model, params, rt, max_batch=MAX_BATCH, max_len=64,
-                      decode_chunk=2, scheduler_policy=pol)
+                      decode_chunk=2, scheduler_policy=pol,
+                      telemetry=Telemetry())
     rng = np.random.default_rng(1234)
     prompts = [rng.integers(0, cfg.vocab_size, size=plen)
                for plen, _, _, _ in PROFILES]
@@ -129,6 +135,17 @@ def check_invariants(eng):
     st_ = eng.stats
     assert st_.decode_slot_steps + st_.decode_idle_slot_steps \
         == st_.decode_steps * MAX_BATCH
+    # Telemetry twin sync: after EVERY engine op the registry counters
+    # equal their EngineStats source of truth, per-tier labels included.
+    reg = eng.telemetry.registry
+    for f in dataclasses.fields(st_):
+        v = getattr(st_, f.name)
+        if isinstance(v, int):
+            assert reg.value("serve_" + f.name) == float(v), f.name
+    for tier, n in st_.decode_steps_by_tier.items():
+        assert reg.value("serve_decode_steps_by_tier", tier=tier) == float(n)
+    for tier, n in st_.tokens_by_tier.items():
+        assert reg.value("serve_tokens_by_tier", tier=tier) == float(n)
     running_uids = set()
     for slot, state in eng.scheduler.occupied():
         h = eng.handles[state.uid]
